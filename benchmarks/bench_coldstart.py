@@ -1,0 +1,76 @@
+"""Paper Tab. 3 + Fig. 10: cold-start footprint and churn.
+
+Measures initialisation latency and memory footprint of Faaslets vs
+Proto-Faaslet restore vs the container-sim baseline, and sustained cold-start
+churn (instances created per second)."""
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (CONTAINER_OVERHEAD_BYTES, FAASLET_OVERHEAD_BYTES,
+                        Faaslet, ProtoFaaslet)
+
+
+def _noop_init(f: Faaslet):
+    f.brk(64 * 1024)
+    f.write(0, b"x" * 1024)
+
+
+def main() -> None:
+    # --- init latency: fresh Faaslet vs Proto restore (Tab. 3) ------------------
+    n = 200
+    t0 = time.perf_counter()
+    for _ in range(n):
+        f = Faaslet("bench", "h0")
+        _noop_init(f)
+    fresh_us = (time.perf_counter() - t0) / n * 1e6
+
+    f = Faaslet("bench", "h0")
+    _noop_init(f)
+    proto = ProtoFaaslet.capture(f)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        proto.restore("h0")
+    restore_us = (time.perf_counter() - t0) / n * 1e6
+
+    # container-sim: full re-init incl. a fresh private state copy (data ship)
+    state = np.zeros(1 << 20, np.uint8)            # 1 MB "image layer"
+    t0 = time.perf_counter()
+    for _ in range(n):
+        g = Faaslet("bench", "h0")
+        _noop_init(g)
+        _ = state.copy()
+    container_us = (time.perf_counter() - t0) / n * 1e6
+
+    emit("tab3_init/faaslet", fresh_us, "fresh faaslet init")
+    emit("tab3_init/proto_restore", restore_us,
+         f"{fresh_us / max(restore_us, 1e-9):.1f}x faster than fresh")
+    emit("tab3_init/container_sim", container_us,
+         f"{container_us / max(restore_us, 1e-9):.0f}x slower than proto")
+
+    # --- memory footprint (Tab. 3) -------------------------------------------------
+    emit("tab3_mem/faaslet_kb", FAASLET_OVERHEAD_BYTES / 1024, "per instance")
+    emit("tab3_mem/container_kb", CONTAINER_OVERHEAD_BYTES / 1024,
+         f"{CONTAINER_OVERHEAD_BYTES / FAASLET_OVERHEAD_BYTES:.0f}x faaslet")
+    emit("tab3_mem/proto_snapshot_kb", proto.size_bytes() / 1024,
+         "snapshot transport size")
+
+    # --- churn (Fig. 10): sustained instance creations per second ----------------
+    t0 = time.perf_counter()
+    count = 0
+    while time.perf_counter() - t0 < 1.0:
+        proto.restore("h0")
+        count += 1
+    emit("fig10_churn/proto_per_s", 1e6 / count, f"{count} restores/s")
+    t0 = time.perf_counter()
+    count = 0
+    while time.perf_counter() - t0 < 1.0:
+        g = Faaslet("bench", "h0")
+        _noop_init(g)
+        count += 1
+    emit("fig10_churn/fresh_per_s", 1e6 / count, f"{count} inits/s")
+
+
+if __name__ == "__main__":
+    main()

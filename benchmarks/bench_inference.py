@@ -1,0 +1,33 @@
+"""Paper Fig. 7: inference serving latency under cold-start ratios."""
+import sys
+
+import numpy as np
+import jax
+
+sys.path.insert(0, "examples")
+
+from benchmarks.common import emit
+
+
+def main() -> None:
+    from inference_serving import serve
+    from repro.configs import smoke_config
+    from repro.models import ExecConfig, build_model
+
+    cfg = smoke_config("qwen1.5-0.5b")
+    model = build_model(cfg, ExecConfig(backend="xla", loss_chunk=0))
+    params = model.init(jax.random.PRNGKey(0))
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    host_leaves = [np.asarray(x) for x in flat]
+
+    for mode in ("faaslet", "container"):
+        for ratio in (0.0, 0.2):
+            r = serve(mode, 16, ratio, model, treedef, host_leaves)
+            emit(f"fig7_infer/{mode}/cold{int(ratio * 100)}/p50",
+                 r["p50_ms"] * 1e3, f"p99={r['p99_ms']:.1f}ms")
+            emit(f"fig7_infer/{mode}/cold{int(ratio * 100)}/init",
+                 r["init_mean_ms"] * 1e3, "mean cold-start init")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Roofline report: reads the dry-run artifacts and prints the per-cell table
+(compute / memory / collective terms, dominant bottleneck, useful-FLOPs)."""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ART = "artifacts/dryrun"
+
+
+def load_cells(mesh: str = "pod16x16", tag: str | None = None):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ART, mesh, "*.json"))):
+        name = os.path.basename(path)[:-5]
+        is_tagged = "__" in name.split("__", 2)[-1] if name.count("__") >= 2 else False
+        if tag is None and name.count("__") >= 2:
+            continue                      # skip perf-variant artifacts
+        if tag is not None and not name.endswith("__" + tag):
+            continue
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def main() -> None:
+    cells = load_cells("pod16x16")
+    if not cells:
+        print("# no dry-run artifacts found; run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun")
+        return
+    for rec in cells:
+        if rec.get("status") != "ok":
+            continue
+        r = rec["roofline"]
+        dom_time = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        emit(f"roofline/{rec['arch']}/{rec['shape']}", dom_time * 1e6,
+             f"dom={r['dominant']} frac={r['roofline_fraction']:.3f} "
+             f"useful={r['useful_flops_ratio']:.3f} "
+             f"peakGiB={rec['memory']['peak_bytes'] / 2**30:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Paper Fig. 6: HOGWILD SGD training — time / network / billable memory,
+Faaslet runtime vs container-sim baseline, across parallelism levels."""
+import sys
+
+sys.path.insert(0, "examples")
+
+from benchmarks.common import emit
+from repro.data import make_sparse_dataset
+
+
+def main() -> None:
+    from sgd_hogwild import run_mode
+    X, y, _ = make_sparse_dataset(96, 384, density=0.1, seed=0)
+    for workers in (2, 4):
+        for mode in ("faaslet", "container"):
+            r = run_mode(mode, X, y, workers, n_epochs=2, n_hosts=2)
+            emit(f"fig6_sgd/{mode}/w{workers}/wall", r["wall_s"] * 1e6,
+                 f"acc={r['acc']:.3f}")
+            emit(f"fig6_sgd/{mode}/w{workers}/transfer_mb",
+                 r["transfer_mb"] * 1e6, "network transfer (MB scaled 1e6)")
+            emit(f"fig6_sgd/{mode}/w{workers}/billable_gbs",
+                 r["billable_gbs"] * 1e6, "billable GB-s (scaled 1e6)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+Run:  PYTHONPATH=src python -m benchmarks.run [table ...]
+      (tables: fig6 fig7 fig8 fig9 tab3 roofline; default: all)
+"""
+import sys
+import traceback
+
+from benchmarks import (bench_coldstart, bench_inference, bench_matmul,
+                        bench_micro, bench_roofline, bench_sgd_training)
+
+TABLES = {
+    "fig6": bench_sgd_training.main,
+    "fig7": bench_inference.main,
+    "fig8": bench_matmul.main,
+    "fig9": bench_micro.main,
+    "tab3": bench_coldstart.main,
+    "roofline": bench_roofline.main,
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(TABLES)
+    print("name,us_per_call,derived")
+    failures = []
+    for name in wanted:
+        try:
+            TABLES[name]()
+        except Exception as e:
+            failures.append((name, e))
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark failures: {[n for n, _ in failures]}")
+
+
+if __name__ == "__main__":
+    main()

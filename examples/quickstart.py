@@ -1,0 +1,58 @@
+"""Quickstart: a tour of the FAASM-on-TPU public API.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import FaasmRuntime, FunctionDef, chain, await_all, outputs
+from repro.state.ddo import Counter, VectorAsync
+
+
+def main():
+    # 1. A cluster of two runtime instances (hosts), Faaslet isolation.
+    rt = FaasmRuntime(n_hosts=2, capacity=4)
+
+    # 2. State lives in the two-tier store: authoritative in the global tier,
+    #    zero-copy shared replicas in each host's local tier.
+    VectorAsync.create(rt.global_tier, "acc", np.zeros(8, np.float32))
+
+    # 3. Functions interact with the world only through the host interface.
+    def worker(api):
+        i = int.from_bytes(api.read_call_input(), "little")
+        vec = VectorAsync(api, "acc")          # maps a shared memory region
+        vec.pull(track_delta=True)
+        vec.add([i % 8], [float(i)])           # HOGWILD-style direct write
+        vec.push_delta()                       # accumulate into the global tier
+        Counter(api, "done").increment()
+        api.write_call_output(f"worker-{i} ok".encode())
+        return 0
+
+    def orchestrator(api):
+        ids = chain(api, "worker", [i.to_bytes(2, "little") for i in range(8)])
+        codes = await_all(api, ids)
+        assert all(c == 0 for c in codes)
+        api.write_call_output(b"; ".join(outputs(api, ids)))
+        return 0
+
+    # 4. Upload = validate + codegen + Proto-Faaslet snapshot (§3.4, §5.2).
+    rt.upload(FunctionDef("worker", worker))
+    rt.upload(FunctionDef("orchestrator", orchestrator))
+
+    # 5. Invoke and chain.
+    cid = rt.invoke("orchestrator")
+    rc = rt.wait(cid, timeout=60)
+    print("return code:", rc)
+    print("output:", rt.output(cid).decode())
+
+    final = np.frombuffer(rt.global_tier.get("acc", host="main"), np.float32)
+    print("accumulated state:", final)
+    print("cold-start stats:", rt.cold_start_stats())
+    print("transfer bytes:", rt.transfer_bytes())
+    print("billable GB-s:", f"{rt.billable_gb_seconds():.2e}")
+    rt.shutdown()
+    assert rc == 0 and final[1] == 1.0
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""repro: FAASM-on-TPU — a stateful serverless runtime for JAX training/serving.
+
+Reproduction of "Faasm: Lightweight Isolation for Efficient Stateful
+Serverless Computing" (Shillaker & Pietzuch, 2020), adapted to TPU pods:
+Faaslet execution contexts, two-tier state, Proto-Faaslet snapshots and an
+Omega-style scheduler orchestrating pjit-distributed JAX train/serve steps.
+"""
+
+__version__ = "0.1.0"

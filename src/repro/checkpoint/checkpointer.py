@@ -1,0 +1,186 @@
+"""Fault-tolerant checkpointing: async, atomic, elastic-restore-friendly.
+
+Layout per step::
+
+    <dir>/step_<N>.tmp/ …writing… -> atomic rename -> <dir>/step_<N>/
+        manifest.json      (tree structure, shapes, dtypes, step)
+        arrays.npz         (flat leaf arrays, host layout)
+
+Writes happen on a background thread (training continues); the manifest is
+written last and the directory renamed atomically, so a crash mid-write never
+corrupts the latest checkpoint.  Restore targets any mesh: leaves are host
+arrays re-sharded by ``device_put`` under the new sharding rules
+(``distributed/elastic.py``) — elastic scaling from the same checkpoint.
+
+The runtime's global state tier checkpoints through the same path
+(``save_global_tier`` / ``restore_global_tier``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+# dtypes numpy can savez/load natively; others round-trip as bit views
+_NUMPY_NATIVE = {"float64", "float32", "float16", "int64", "int32", "int16",
+                 "int8", "uint64", "uint32", "uint16", "uint8", "bool",
+                 "complex64", "complex128"}
+
+
+def _flatten_with_paths(tree) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+    return items, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._last_error: Optional[BaseException] = None
+
+    # -- save -------------------------------------------------------------------
+
+    def save(self, step: int, tree, *, blocking: bool = False,
+             extra: Optional[Dict[str, Any]] = None) -> None:
+        """Snapshot a pytree (params/opt state/cache).  Async by default."""
+        items, _ = _flatten_with_paths(tree)
+
+        def to_savable(leaf):
+            a = np.asarray(leaf)
+            if a.dtype.name not in _NUMPY_NATIVE:     # bf16/f8 via bit view
+                return a.view(np.uint16 if a.dtype.itemsize == 2 else np.uint8)
+            return a
+
+        host_arrays = {f"leaf_{i}": to_savable(leaf)
+                       for i, (_, leaf) in enumerate(items)}
+        manifest = {
+            "step": step,
+            "paths": [p for p, _ in items],
+            "dtypes": [str(np.asarray(l).dtype) for _, l in items],
+            "shapes": [list(np.asarray(l).shape) for _, l in items],
+            "extra": extra or {},
+            "time": time.time(),
+        }
+        self.wait()
+
+        def _write():
+            try:
+                tmp = os.path.join(self.directory, f"step_{step}.tmp")
+                final = os.path.join(self.directory, f"step_{step}")
+                os.makedirs(tmp, exist_ok=True)
+                np.savez(os.path.join(tmp, "arrays.npz"), **host_arrays)
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)                      # atomic commit
+                self._gc()
+            except BaseException as e:                     # surfaced on wait()
+                self._last_error = e
+
+        if blocking:
+            _write()
+            if self._last_error:
+                raise self._last_error
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._last_error:
+            err, self._last_error = self._last_error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = sorted(self.steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------------
+
+    def steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name.split("_", 1)[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def restore(self, tree_like, step: Optional[int] = None
+                ) -> Tuple[Any, int, Dict[str, Any]]:
+        """Restore into the structure of ``tree_like`` (shapes must match)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        leaves = [data[f"leaf_{i}"] for i in range(len(manifest["paths"]))]
+        flat, treedef = jax.tree_util.tree_flatten(tree_like)
+        if len(flat) != len(leaves):
+            raise ValueError(
+                f"checkpoint has {len(leaves)} leaves, target structure has "
+                f"{len(flat)}")
+        def from_saved(l, t, dtype_name):
+            a = np.asarray(l)
+            if dtype_name not in _NUMPY_NATIVE:       # restore bit view
+                import ml_dtypes
+                a = a.view(np.dtype(getattr(ml_dtypes, dtype_name)))
+            if hasattr(t, "dtype") and a.dtype.name in _NUMPY_NATIVE and \
+                    np.asarray(t).dtype.name in _NUMPY_NATIVE:
+                a = a.astype(np.asarray(t).dtype)
+            return a
+
+        restored = [from_saved(l, t, d) for l, t, d in
+                    zip(leaves, flat, manifest["dtypes"])]
+        return (jax.tree_util.tree_unflatten(treedef, restored), step,
+                manifest["extra"])
+
+
+# -- global-tier (runtime state) checkpointing ----------------------------------------
+
+def save_global_tier(global_tier, directory: str, tag: str = "state") -> str:
+    """Checkpoint every state key of the runtime's global tier."""
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f"{tag}.tmp.npz")
+    final = os.path.join(directory, f"{tag}.npz")
+    arrays = {}
+    for i, key in enumerate(global_tier.keys()):
+        arrays[f"k{i}"] = np.frombuffer(
+            global_tier.get(key, host="ckpt"), np.uint8)
+        arrays[f"n{i}"] = np.frombuffer(key.encode(), np.uint8)
+    np.savez(tmp, **arrays)
+    os.replace(tmp, final)
+    return final
+
+
+def restore_global_tier(global_tier, directory: str, tag: str = "state") -> int:
+    data = np.load(os.path.join(directory, f"{tag}.npz"))
+    n = 0
+    i = 0
+    while f"k{i}" in data:
+        key = bytes(data[f"n{i}"]).decode()
+        global_tier.set(key, bytes(data[f"k{i}"]), host="ckpt")
+        n += 1
+        i += 1
+    return n

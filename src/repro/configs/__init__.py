@@ -1,0 +1,26 @@
+from repro.configs.base import (
+    ModelConfig,
+    ShapeConfig,
+    SHAPES,
+    TRAIN_4K,
+    PREFILL_32K,
+    DECODE_32K,
+    LONG_500K,
+    shape_applicable,
+)
+from repro.configs.registry import (
+    ARCHS,
+    arch_ids,
+    cells,
+    get_config,
+    get_shape,
+    smoke_config,
+    smoke_shape,
+)
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+    "shape_applicable", "ARCHS", "arch_ids", "cells",
+    "get_config", "get_shape", "smoke_config", "smoke_shape",
+]

@@ -1,0 +1,17 @@
+"""FAASM core: Faaslets, host interface, Proto-Faaslets, scheduler, runtime."""
+from repro.core.faaslet import (CONTAINER_OVERHEAD_BYTES,
+                                FAASLET_OVERHEAD_BYTES, Faaslet,
+                                FaasletMemoryFault, ResourceLimitExceeded)
+from repro.core.host_interface import FaasmAPI, StateKeyError
+from repro.core.proto import ExecutableCache, ProtoFaaslet
+from repro.core.runtime import Call, FaasmRuntime, FunctionDef, Host
+from repro.core.scheduler import LocalScheduler
+from repro.core.chain import await_all, chain, outputs
+from repro.core.vfs import VirtualFS
+
+__all__ = [
+    "Faaslet", "FaasletMemoryFault", "ResourceLimitExceeded", "FaasmAPI",
+    "StateKeyError", "ExecutableCache", "ProtoFaaslet", "Call", "FaasmRuntime",
+    "FunctionDef", "Host", "LocalScheduler", "await_all", "chain", "outputs",
+    "VirtualFS", "FAASLET_OVERHEAD_BYTES", "CONTAINER_OVERHEAD_BYTES",
+]

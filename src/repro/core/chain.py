@@ -1,0 +1,18 @@
+"""Chained-call helpers (the paper's chain/await loops, Listing 1 pattern)."""
+from __future__ import annotations
+
+from typing import Iterable, List, Sequence
+
+
+def chain(api, name: str, inputs: Sequence[bytes]) -> List[int]:
+    """Spawn one chained call per input; returns the call IDs."""
+    return [api.chain_call(name, inp) for inp in inputs]
+
+
+def await_all(api, call_ids: Iterable[int]) -> List[int]:
+    """Block until every chained call finishes; returns their codes."""
+    return [api.await_call(cid) for cid in call_ids]
+
+
+def outputs(api, call_ids: Iterable[int]) -> List[bytes]:
+    return [api.get_call_output(cid) for cid in call_ids]

@@ -1,0 +1,191 @@
+"""Faaslet: the paper's isolation abstraction, adapted to this runtime.
+
+A Faaslet owns
+  * a **private linear memory** (the WebAssembly-style byte arena): a single
+    contiguous address space starting at 0, grown via brk/mmap, with every
+    access bounds-checked — the software-fault-isolation discipline.  Compute
+    inside XLA executables is already confined to its buffers; the SFI
+    enforcement point here is the host side that stitches calls and state.
+  * **shared memory regions** (§3.3): page-aligned windows of the linear
+    address space remapped onto local-tier replica buffers.  The function
+    keeps seeing one dense address space; accesses to mapped offsets hit the
+    *same numpy buffer* every co-located Faaslet maps — genuine zero-copy
+    sharing (Fig. 2).
+  * **resource budgets** — the cgroup/traffic-shaping analogue: CPU-time and
+    network-byte accounting with hard caps enforced at the host interface.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+WASM_PAGE = 65536
+FAASLET_OVERHEAD_BYTES = 200 * 1024       # paper Tab. 3: ~200 kB per Faaslet
+CONTAINER_OVERHEAD_BYTES = 8 * (1 << 20)  # paper §6.2: ~8 MB per container
+
+_ids = itertools.count()
+
+
+class FaasletMemoryFault(Exception):
+    """Out-of-bounds access trapped by the SFI layer."""
+
+
+class ResourceLimitExceeded(Exception):
+    """cgroup/tc analogue: CPU or network budget exhausted."""
+
+
+@dataclass
+class SharedRegion:
+    base: int                 # address in the Faaslet's linear memory
+    size: int
+    key: str                  # state key this region is mapped onto
+    backing: np.ndarray       # view into the local-tier replica buffer
+    writable: bool = True
+
+
+@dataclass
+class ResourceUsage:
+    cpu_ns: int = 0
+    net_in: int = 0
+    net_out: int = 0
+    cpu_budget_ns: Optional[int] = None
+    net_budget: Optional[int] = None
+
+    def charge_cpu(self, ns: int):
+        self.cpu_ns += ns
+        if self.cpu_budget_ns is not None and self.cpu_ns > self.cpu_budget_ns:
+            raise ResourceLimitExceeded(f"cpu budget exceeded ({self.cpu_ns} ns)")
+
+    def charge_net(self, n_in: int = 0, n_out: int = 0):
+        self.net_in += n_in
+        self.net_out += n_out
+        if self.net_budget is not None and \
+                self.net_in + self.net_out > self.net_budget:
+            raise ResourceLimitExceeded("network budget exceeded")
+
+
+class Faaslet:
+    """One isolated execution context bound to a host."""
+
+    def __init__(self, func_name: str, host_id: str, *,
+                 memory_limit: int = 64 * WASM_PAGE,
+                 initial_pages: int = 4,
+                 cpu_budget_ns: Optional[int] = None,
+                 net_budget: Optional[int] = None):
+        self.id = next(_ids)
+        self.func_name = func_name
+        self.host_id = host_id
+        self.memory_limit = memory_limit
+        self._arena = np.zeros(initial_pages * WASM_PAGE, np.uint8)
+        self._brk = 0
+        self._regions: List[SharedRegion] = []
+        self._region_top = memory_limit            # shared regions map above it
+        self.usage = ResourceUsage(cpu_budget_ns=cpu_budget_ns,
+                                   net_budget=net_budget)
+        self.created_at = time.perf_counter()
+        self.calls_served = 0
+        self.restored_from_proto = False
+        self._lock = threading.RLock()
+
+    # -- private linear memory (brk/mmap) --------------------------------------
+
+    @property
+    def brk_value(self) -> int:
+        return self._brk
+
+    def brk(self, new_brk: int) -> int:
+        with self._lock:
+            if new_brk < 0 or new_brk > self.memory_limit:
+                raise FaasletMemoryFault(
+                    f"brk {new_brk} beyond memory limit {self.memory_limit}")
+            if new_brk > self._arena.size:
+                pages = -(-new_brk // WASM_PAGE)
+                grown = np.zeros(pages * WASM_PAGE, np.uint8)
+                grown[:self._arena.size] = self._arena
+                self._arena = grown
+            self._brk = new_brk
+            return self._brk
+
+    def sbrk(self, delta: int) -> int:
+        old = self._brk
+        self.brk(self._brk + delta)
+        return old
+
+    def mmap(self, length: int) -> int:
+        """Anonymous private mapping == arena grow (the paper's mmap action)."""
+        return self.sbrk(-(-length // WASM_PAGE) * WASM_PAGE)
+
+    # -- shared regions (§3.3) ------------------------------------------------------
+
+    def map_shared_region(self, key: str, backing: np.ndarray,
+                          writable: bool = True) -> SharedRegion:
+        """Extend linear memory and remap the new pages onto ``backing``.
+
+        Returns the region; its ``base`` is the Faaslet-local address."""
+        with self._lock:
+            size = -(-backing.size // WASM_PAGE) * WASM_PAGE
+            region = SharedRegion(base=self._region_top, size=backing.size,
+                                  key=key, backing=backing, writable=writable)
+            self._regions.append(region)
+            self._region_top += size
+            return region
+
+    def unmap_shared_region(self, region: SharedRegion) -> None:
+        with self._lock:
+            self._regions.remove(region)
+
+    def region_for(self, key: str) -> Optional[SharedRegion]:
+        with self._lock:
+            for r in self._regions:
+                if r.key == key:
+                    return r
+            return None
+
+    # -- bounds-checked access (the SFI guarantee) -----------------------------------
+
+    def _locate(self, addr: int, length: int) -> Tuple[np.ndarray, int]:
+        if length < 0:
+            raise FaasletMemoryFault("negative length")
+        if 0 <= addr and addr + length <= self._brk:
+            return self._arena, addr
+        for r in self._regions:
+            if r.base <= addr and addr + length <= r.base + r.size:
+                return r.backing, addr - r.base
+        raise FaasletMemoryFault(
+            f"access [{addr}, {addr + length}) outside private memory "
+            f"[0, {self._brk}) and all shared regions")
+
+    def read(self, addr: int, length: int) -> np.ndarray:
+        """Zero-copy view of linear memory (trap on out-of-bounds)."""
+        buf, off = self._locate(addr, length)
+        return buf[off:off + length]
+
+    def write(self, addr: int, data) -> None:
+        data = np.frombuffer(bytes(data), np.uint8) if not isinstance(
+            data, np.ndarray) else data.view(np.uint8).reshape(-1)
+        buf, off = self._locate(addr, len(data))
+        for r in self._regions:
+            if r.backing is buf and not r.writable:
+                raise FaasletMemoryFault(f"write to read-only region {r.key!r}")
+        buf[off:off + len(data)] = data
+
+    # -- introspection ----------------------------------------------------------------
+
+    def memory_bytes(self) -> int:
+        """Private footprint (shared regions are counted once per host)."""
+        return self._arena.size + FAASLET_OVERHEAD_BYTES
+
+    def snapshot_arena(self) -> bytes:
+        with self._lock:
+            return self._arena[:self._brk].tobytes()
+
+    def restore_arena(self, data: bytes, brk: int) -> None:
+        with self._lock:
+            self.brk(max(brk, len(data)))
+            self._arena[:len(data)] = np.frombuffer(data, np.uint8)
+            self._brk = brk

@@ -1,0 +1,297 @@
+"""The Faaslet host interface — the full Table-2 API surface.
+
+One ``FaasmAPI`` instance is bound per (Faaslet, call).  It is the *only* way
+a function interacts with the outside world, and the single place where the
+isolation invariants are enforced:
+
+  * state access goes through shared regions (zero-copy, ``faaslet`` mode) or
+    private copies (``container`` data-shipping baseline);
+  * every byte moved to/from the global tier is charged against the Faaslet's
+    network budget (traffic-shaping analogue) and the host's transfer metrics;
+  * the filesystem is read-global / write-local with unforgeable handles
+    (WASI capability style);
+  * gettime is a per-call monotonic clock, getrandom draws host entropy.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import threading
+import time
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from repro.core.faaslet import Faaslet, FaasletMemoryFault
+
+
+class StateKeyError(KeyError):
+    pass
+
+
+class FaasmAPI:
+    def __init__(self, faaslet: Faaslet, host, runtime, call):
+        self.faaslet = faaslet
+        self.host = host
+        self.runtime = runtime
+        self.call = call
+        self._t0 = time.monotonic_ns()
+        self._fds: Dict[int, dict] = {}
+        self._fd_counter = itertools.count(3)
+        self._dl_handles: Dict[int, str] = {}
+        self._dl_counter = itertools.count(1)
+        self._local_locked = {}
+
+    # ------------------------------------------------------------------ calls --
+
+    def read_call_input(self) -> bytes:
+        return self.call.input
+
+    def write_call_output(self, out_data: bytes) -> None:
+        self.call.output = bytes(out_data)
+
+    def chain_call(self, name: str, args: bytes = b"") -> int:
+        self.faaslet.usage.charge_net(n_out=len(args))
+        return self.runtime.invoke(name, bytes(args), parent=self.call)
+
+    def await_call(self, call_id: int, timeout: Optional[float] = None) -> int:
+        return self.runtime.wait(call_id, timeout=timeout)
+
+    def get_call_output(self, call_id: int) -> bytes:
+        out = self.runtime.output(call_id)
+        self.faaslet.usage.charge_net(n_in=len(out))
+        return out
+
+    # ------------------------------------------------------------------ state --
+
+    def _local(self):
+        return self.host.local_tier_for(self.faaslet)
+
+    def get_state(self, key: str, *, writable: bool = True) -> np.ndarray:
+        """Pointer (numpy view) to the state value — maps a shared region.
+
+        ``faaslet`` isolation: the view aliases the host-shared replica buffer
+        (zero-copy).  ``container`` isolation: a private copy (data shipping).
+        """
+        lt = self._local()
+        if not lt.has(key) and not self.runtime.global_tier.exists(key):
+            raise StateKeyError(key)
+        replica = lt.pull(key)
+        if self.host.isolation == "container":
+            self.faaslet.usage.charge_net(n_in=replica.buf.size)
+            return replica.buf.copy()
+        region = self.faaslet.region_for(key)
+        if region is None or region.backing is not replica.buf:
+            region = self.faaslet.map_shared_region(key, replica.buf,
+                                                    writable=writable)
+        return self.faaslet.read(region.base, region.size)
+
+    def get_state_offset(self, key: str, offset: int, length: int,
+                         *, writable: bool = True) -> np.ndarray:
+        lt = self._local()
+        lt.pull_range(key, offset, length)
+        replica = lt.replica(key)
+        if self.host.isolation == "container":
+            self.faaslet.usage.charge_net(n_in=length)
+            return replica.buf[offset:offset + length].copy()
+        region = self.faaslet.region_for(key)
+        if region is None or region.backing is not replica.buf:
+            region = self.faaslet.map_shared_region(key, replica.buf,
+                                                    writable=writable)
+        return self.faaslet.read(region.base + offset, length)
+
+    def set_state(self, key: str, value: bytes) -> None:
+        value = bytes(value)
+        lt = self._local()
+        r = lt.replica(key, size=len(value))
+        r.lock.acquire_write()
+        try:
+            r.buf[:len(value)] = np.frombuffer(value, np.uint8)
+            r.full = True
+            r.present_chunks = set(range(self.runtime.global_tier.n_chunks(key)
+                                         if self.runtime.global_tier.exists(key)
+                                         else 1))
+        finally:
+            r.lock.release_write()
+        lt.mark_dirty(key, 0, len(value))
+
+    def set_state_offset(self, key: str, value: bytes, offset: int) -> None:
+        value = bytes(value)
+        lt = self._local()
+        r = lt.replica(key, size=offset + len(value))
+        r.lock.acquire_write()
+        try:
+            r.buf[offset:offset + len(value)] = np.frombuffer(value, np.uint8)
+        finally:
+            r.lock.release_write()
+        lt.mark_dirty(key, offset, len(value))
+
+    def push_state(self, key: str) -> None:
+        n = self._local().push(key)
+        self.faaslet.usage.charge_net(n_out=n)
+
+    def push_state_partial(self, key: str) -> None:
+        """Push only dirty chunks (what VectorAsync.push() uses)."""
+        n = self._local().push_dirty(key)
+        self.faaslet.usage.charge_net(n_out=n)
+
+    def push_state_delta(self, key: str, dtype=np.float32) -> None:
+        """Accumulating push: global += local − base (cross-host HOGWILD)."""
+        n = self._local().push_delta(key, dtype=dtype)
+        self.faaslet.usage.charge_net(n_out=n)
+
+    def pull_state(self, key: str, track_delta: bool = False) -> None:
+        before = self.runtime.global_tier.bytes_pulled[self.host.id]
+        self._local().pull(key)
+        if track_delta:
+            self._local().snapshot_base(key)
+        moved = self.runtime.global_tier.bytes_pulled[self.host.id] - before
+        self.faaslet.usage.charge_net(n_in=moved)
+
+    def pull_state_chunk(self, key: str, chunk_idx: int) -> None:
+        before = self.runtime.global_tier.bytes_pulled[self.host.id]
+        self._local().pull_chunk(key, chunk_idx)
+        moved = self.runtime.global_tier.bytes_pulled[self.host.id] - before
+        self.faaslet.usage.charge_net(n_in=moved)
+
+    def append_state(self, key: str, value: bytes) -> None:
+        self.runtime.global_tier.append(key, bytes(value), host=self.host.id)
+        self.faaslet.usage.charge_net(n_out=len(value))
+
+    # -- locks ----------------------------------------------------------------
+
+    def lock_state_read(self, key: str):
+        self._local().replica(key, size=max(1, self.runtime.global_tier.size(key)
+                                            if self.runtime.global_tier.exists(key)
+                                            else 1)).lock.acquire_read()
+
+    def unlock_state_read(self, key: str):
+        self._local()._replicas[key].lock.release_read()
+
+    def lock_state_write(self, key: str):
+        self._local().replica(key, size=max(1, self.runtime.global_tier.size(key)
+                                            if self.runtime.global_tier.exists(key)
+                                            else 1)).lock.acquire_write()
+
+    def unlock_state_write(self, key: str):
+        self._local()._replicas[key].lock.release_write()
+
+    def lock_state_global_read(self, key: str):
+        self.runtime.global_tier.lock(key).acquire_read()
+
+    def unlock_state_global_read(self, key: str):
+        self.runtime.global_tier.lock(key).release_read()
+
+    def lock_state_global_write(self, key: str):
+        self.runtime.global_tier.lock(key).acquire_write()
+
+    def unlock_state_global_write(self, key: str):
+        self.runtime.global_tier.lock(key).release_write()
+
+    # ------------------------------------------------------------------ dynlink --
+
+    def dlopen(self, name: str) -> int:
+        if not self.runtime.has_module(name):
+            raise FileNotFoundError(f"no module {name!r} uploaded")
+        h = next(self._dl_counter)
+        self._dl_handles[h] = name
+        return h
+
+    def dlsym(self, handle: int, symbol: str) -> Callable:
+        name = self._dl_handles[handle]
+        return self.runtime.module_symbol(name, symbol)
+
+    def dlclose(self, handle: int) -> int:
+        self._dl_handles.pop(handle, None)
+        return 0
+
+    # ------------------------------------------------------------------ memory --
+
+    def mmap(self, length: int) -> int:
+        return self.faaslet.mmap(length)
+
+    def brk(self, new_brk: int) -> int:
+        return self.faaslet.brk(new_brk)
+
+    def sbrk(self, delta: int) -> int:
+        return self.faaslet.sbrk(delta)
+
+    # ------------------------------------------------------------------ network --
+
+    def socket(self) -> int:
+        fd = next(self._fd_counter)
+        self._fds[fd] = {"kind": "socket", "peer": None, "rx": []}
+        return fd
+
+    def connect(self, fd: int, address: str) -> int:
+        sock = self._fds.get(fd)
+        if sock is None or sock["kind"] != "socket":
+            raise OSError("bad socket fd")
+        if address.startswith("unix:"):
+            raise OSError("AF_UNIX not permitted")          # §3.2 networking
+        sock["peer"] = address
+        return 0
+
+    def send(self, fd: int, data: bytes) -> int:
+        sock = self._fds[fd]
+        if sock["peer"] is None:
+            raise OSError("not connected")
+        self.faaslet.usage.charge_net(n_out=len(data))      # traffic shaping
+        self.runtime.deliver_network(self.host.id, sock["peer"], bytes(data))
+        return len(data)
+
+    def recv(self, fd: int, max_len: int) -> bytes:
+        sock = self._fds[fd]
+        data = self.runtime.receive_network(self.host.id, sock["peer"], max_len)
+        self.faaslet.usage.charge_net(n_in=len(data))
+        return data
+
+    # ------------------------------------------------------------------ file I/O --
+
+    def open(self, path: str, mode: str = "r") -> int:
+        vfs = self.runtime.vfs
+        if "w" not in mode and not vfs.exists(self.host.id, path):
+            raise FileNotFoundError(path)
+        fd = next(self._fd_counter)
+        self._fds[fd] = {"kind": "file", "path": path, "pos": 0, "mode": mode}
+        return fd
+
+    def read(self, fd: int, length: int) -> bytes:
+        f = self._fds[fd]
+        data = self.runtime.vfs.read(self.host.id, f["path"])
+        out = data[f["pos"]:f["pos"] + length]
+        f["pos"] += len(out)
+        return out
+
+    def write(self, fd: int, data: bytes) -> int:
+        f = self._fds[fd]
+        if "w" not in f["mode"] and "a" not in f["mode"]:
+            raise PermissionError("fd not writable")
+        self.runtime.vfs.write_local(self.host.id, f["path"], bytes(data),
+                                     append=("a" in f["mode"] or f["pos"] > 0))
+        f["pos"] += len(data)
+        return len(data)
+
+    def stat(self, path: str) -> dict:
+        vfs = self.runtime.vfs
+        if not vfs.exists(self.host.id, path):
+            raise FileNotFoundError(path)
+        return {"size": len(vfs.read(self.host.id, path))}
+
+    def dup(self, fd: int) -> int:
+        new = next(self._fd_counter)
+        self._fds[new] = dict(self._fds[fd])
+        return new
+
+    def close(self, fd: int) -> int:
+        self._fds.pop(fd, None)
+        return 0
+
+    # ------------------------------------------------------------------ misc --
+
+    def gettime(self) -> int:
+        """Per-call monotonic clock (ns since call start)."""
+        return time.monotonic_ns() - self._t0
+
+    def getrandom(self, n: int) -> bytes:
+        return os.urandom(n)

@@ -1,0 +1,107 @@
+"""Proto-Faaslets: ahead-of-time snapshots restored in ~µs (Faasm §5.2).
+
+Two cold-start costs exist on a TPU serving/training host, both attacked here:
+
+  1. **Execution state** — the function's initialised linear memory plus any
+     host objects its init code built (e.g. weights already laid out).  A
+     ``ProtoFaaslet`` captures these once; ``restore()`` stamps out a fresh
+     Faaslet from the snapshot.  Snapshots are plain bytes: OS-independent and
+     restorable on any host in the cluster (cross-host restore).
+  2. **XLA compilation** — seconds-to-minutes per (function, arch, shape,
+     mesh).  The ``ExecutableCache`` is the Proto-Faaslet of the compiled
+     artifact: the first lowering pays the compile; every Faaslet spawned
+     afterwards binds the cached executable.
+
+After every call the runtime *resets* the Faaslet from its Proto-Faaslet
+(§5.2 multi-tenant reset): no information from the previous call survives in
+private memory.
+"""
+from __future__ import annotations
+
+import pickle
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.faaslet import Faaslet
+
+
+@dataclass(frozen=True)
+class ProtoFaaslet:
+    func_name: str
+    arena: bytes
+    brk: int
+    memory_limit: int
+    user_state: bytes = b""               # pickled init-code products
+
+    @staticmethod
+    def capture(faaslet: Faaslet, user_state: Any = None) -> "ProtoFaaslet":
+        return ProtoFaaslet(
+            func_name=faaslet.func_name,
+            arena=faaslet.snapshot_arena(),
+            brk=faaslet.brk_value,
+            memory_limit=faaslet.memory_limit,
+            user_state=pickle.dumps(user_state) if user_state is not None else b"",
+        )
+
+    def restore(self, host_id: str) -> Tuple[Faaslet, Any]:
+        """Stamp out a fresh Faaslet from this snapshot (any host)."""
+        f = Faaslet(self.func_name, host_id, memory_limit=self.memory_limit)
+        f.restore_arena(self.arena, self.brk)
+        f.restored_from_proto = True
+        state = pickle.loads(self.user_state) if self.user_state else None
+        return f, state
+
+    # -- cross-host / global-tier transport -----------------------------------
+
+    def serialize(self) -> bytes:
+        return pickle.dumps(self)
+
+    @staticmethod
+    def deserialize(data: bytes) -> "ProtoFaaslet":
+        obj = pickle.loads(data)
+        if not isinstance(obj, ProtoFaaslet):
+            raise TypeError("not a ProtoFaaslet snapshot")
+        return obj
+
+    def size_bytes(self) -> int:
+        return len(self.arena) + len(self.user_state)
+
+
+class ExecutableCache:
+    """Compiled-executable snapshots keyed by (fn, arch, shape, mesh) fingerprint."""
+
+    def __init__(self):
+        self._cache: Dict[Tuple, Any] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.compile_seconds = 0.0
+
+    def get_or_build(self, key: Tuple, build: Callable[[], Any]):
+        """Returns (executable, was_hit, seconds_spent)."""
+        with self._lock:
+            if key in self._cache:
+                self.hits += 1
+                return self._cache[key], True, 0.0
+        t0 = time.perf_counter()
+        built = build()
+        dt = time.perf_counter() - t0
+        with self._lock:
+            self._cache.setdefault(key, built)
+            self.misses += 1
+            self.compile_seconds += dt
+        return built, False, dt
+
+    def contains(self, key: Tuple) -> bool:
+        with self._lock:
+            return key in self._cache
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "entries": len(self._cache),
+                    "compile_seconds": self.compile_seconds}

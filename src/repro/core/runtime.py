@@ -1,0 +1,508 @@
+"""FAASM runtime: hosts, calls, chaining, fault tolerance (Faasm §5).
+
+A :class:`FaasmRuntime` manages a cluster of :class:`Host` instances (each a
+runtime instance with its own local tier, local scheduler, Faaslet pool and
+executor threads).  Functions are uploaded once (validation → codegen →
+Proto-Faaslet generation, §3.4/§5.2) and then invoked/chained from anywhere.
+
+Isolation modes (the paper's §6 comparison, same application code):
+  * ``faaslet``   — co-located functions share the host local tier zero-copy;
+                    cold starts restore Proto-Faaslets.
+  * ``container`` — the Knative-like baseline: every Faaslet gets a *private*
+                    tier (state is copied in/out — data shipping), cold starts
+                    re-run init code, per-instance memory overhead is
+                    container-sized.
+
+Fault tolerance: heartbeat-based failure detection, re-execution of calls
+lost on dead hosts, speculative re-execution of stragglers (work sharing),
+elastic add/remove of hosts.
+"""
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+import time
+from collections import defaultdict
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.faaslet import (CONTAINER_OVERHEAD_BYTES,
+                                FAASLET_OVERHEAD_BYTES, Faaslet)
+from repro.core.host_interface import FaasmAPI
+from repro.core.proto import ExecutableCache, ProtoFaaslet
+from repro.core.scheduler import LocalScheduler
+from repro.core.vfs import VirtualFS
+from repro.state.kv import GlobalTier
+from repro.state.local import LocalTier
+
+_call_ids = itertools.count(1)
+
+
+@dataclass
+class FunctionDef:
+    """An uploaded function: the 'WebAssembly module' analogue."""
+
+    name: str
+    fn: Callable[[FaasmAPI], int]               # returns a status code
+    init_fn: Optional[Callable[[FaasmAPI], Any]] = None
+    memory_limit: int = 64 * 65536
+    cpu_budget_ns: Optional[int] = None
+    net_budget: Optional[int] = None
+
+
+@dataclass
+class Call:
+    id: int
+    fn: str
+    input: bytes
+    status: str = "pending"                      # pending|running|done|failed
+    output: bytes = b""
+    return_code: int = -1
+    host: Optional[str] = None
+    parent: Optional[int] = None
+    attempts: int = 0
+    cold_start: bool = False
+    t_submit: float = 0.0
+    t_start: float = 0.0
+    t_end: float = 0.0
+    error: str = ""
+    twin_id: Optional[int] = None                # speculative re-execution
+    event: threading.Event = field(default_factory=threading.Event)
+
+    @property
+    def latency(self) -> float:
+        return (self.t_end or time.perf_counter()) - self.t_submit
+
+
+class Host:
+    """One FAASM runtime instance (one server / TPU host)."""
+
+    def __init__(self, host_id: str, runtime: "FaasmRuntime", *,
+                 capacity: int = 8, isolation: str = "faaslet"):
+        self.id = host_id
+        self.runtime = runtime
+        self.capacity = capacity
+        self.isolation = isolation
+        self.local_tier = LocalTier(host_id, runtime.global_tier)
+        self._container_tiers: Dict[int, LocalTier] = {}
+        self._warm: Dict[str, List[Faaslet]] = defaultdict(list)
+        self._user_state: Dict[int, Any] = {}
+        self._mutex = threading.RLock()
+        self._inflight = 0
+        self.alive = True
+        self.pool = ThreadPoolExecutor(max_workers=capacity,
+                                       thread_name_prefix=f"host-{host_id}")
+        self.heartbeat = time.monotonic()
+        # metrics
+        self.cold_starts = 0
+        self.warm_hits = 0
+        self.init_seconds: List[float] = []
+        self.billable_byte_seconds = 0.0
+        self.calls_done = 0
+
+    # -- capacity / liveness -----------------------------------------------------
+
+    def has_capacity(self) -> bool:
+        with self._mutex:
+            return self.alive and self._inflight < self.capacity
+
+    def beat(self):
+        self.heartbeat = time.monotonic()
+
+    # -- tiers -------------------------------------------------------------------
+
+    def local_tier_for(self, faaslet: Faaslet) -> LocalTier:
+        if self.isolation == "container":
+            with self._mutex:
+                t = self._container_tiers.get(faaslet.id)
+                if t is None:
+                    t = LocalTier(f"{self.id}/c{faaslet.id}",
+                                  self.runtime.global_tier)
+                    # container pulls are charged to the host for metrics
+                    t.host_id = self.id
+                    self._container_tiers[faaslet.id] = t
+                return t
+        return self.local_tier
+
+    def memory_bytes(self) -> int:
+        """Host resident footprint: shared tier + per-instance overheads."""
+        with self._mutex:
+            per_inst = sum(f.memory_bytes() for fl in self._warm.values()
+                           for f in fl)
+            if self.isolation == "container":
+                per_inst += sum(t.memory_bytes()
+                                for t in self._container_tiers.values())
+                per_inst += CONTAINER_OVERHEAD_BYTES * max(
+                    1, sum(len(fl) for fl in self._warm.values()))
+            return self.local_tier.memory_bytes() + per_inst
+
+    # -- execution -------------------------------------------------------------
+
+    def submit(self, call: Call):
+        with self._mutex:
+            if not self.alive:
+                raise RuntimeError(f"host {self.id} is down")
+            self._inflight += 1
+        self.pool.submit(self._run_guarded, call)
+
+    def _run_guarded(self, call: Call):
+        try:
+            self._run(call)
+        except Exception as e:                    # defensive: never lose a call
+            call.error = f"host crash: {e!r}"
+            call.status = "failed"
+            call.return_code = 1
+            call.t_end = time.perf_counter()
+            call.event.set()
+        finally:
+            with self._mutex:
+                self._inflight -= 1
+
+    def _acquire_faaslet(self, fdef: FunctionDef):
+        with self._mutex:
+            pool = self._warm[fdef.name]
+            if pool:
+                self.warm_hits += 1
+                return pool.pop(), False
+        # cold start
+        t0 = time.perf_counter()
+        proto = self.runtime.proto_for(fdef.name, host=self.id)
+        if proto is not None and self.isolation == "faaslet":
+            f, user_state = proto.restore(self.id)
+            self._user_state[f.id] = user_state
+        else:
+            f = Faaslet(fdef.name, self.id, memory_limit=fdef.memory_limit,
+                        cpu_budget_ns=fdef.cpu_budget_ns,
+                        net_budget=fdef.net_budget)
+            if fdef.init_fn is not None:          # container path re-inits
+                api = FaasmAPI(f, self, self.runtime, _InitCall())
+                self._user_state[f.id] = fdef.init_fn(api)
+        dt = time.perf_counter() - t0
+        with self._mutex:
+            self.cold_starts += 1
+            self.init_seconds.append(dt)
+        return f, True
+
+    def user_state(self, faaslet: Faaslet) -> Any:
+        return self._user_state.get(faaslet.id)
+
+    def _run(self, call: Call):
+        self.beat()
+        rt = self.runtime
+        fdef = rt.functions[call.fn]
+        call.host = self.id
+        call.status = "running"
+        call.t_start = time.perf_counter()
+        faaslet, cold = self._acquire_faaslet(fdef)
+        call.cold_start = cold
+        api = FaasmAPI(faaslet, self, rt, call)
+        t0 = time.perf_counter()
+        try:
+            rc = fdef.fn(api)
+            call.return_code = int(rc) if rc is not None else 0
+            call.status = "done" if call.return_code == 0 else "failed"
+        except Exception as e:
+            call.return_code = 1
+            call.status = "failed"
+            call.error = repr(e)
+        call.t_end = time.perf_counter()
+        dur = call.t_end - t0
+        faaslet.usage.charge_cpu(int(dur * 1e9))
+        faaslet.calls_served += 1
+
+        # billable memory (GB·s attribution, §6.1 "billable memory")
+        overhead = (CONTAINER_OVERHEAD_BYTES if self.isolation == "container"
+                    else FAASLET_OVERHEAD_BYTES)
+        priv = faaslet.memory_bytes() - FAASLET_OVERHEAD_BYTES + overhead
+        if self.isolation == "container":
+            priv += self.local_tier_for(faaslet).memory_bytes()
+        with self._mutex:
+            self.billable_byte_seconds += dur * priv
+            self.calls_done += 1
+
+        # §5.2: reset from Proto-Faaslet so no private data leaks across calls
+        proto = rt.proto_for(call.fn, host=self.id, transfer=False)
+        if proto is not None and self.isolation == "faaslet":
+            faaslet.restore_arena(proto.arena, proto.brk)
+        with self._mutex:
+            if self.alive:
+                self._warm[call.fn].append(faaslet)
+        self.beat()
+        call.event.set()
+
+    # -- failure / drain ---------------------------------------------------------
+
+    def fail(self):
+        """Simulate host loss: local tier and warm pool are gone."""
+        with self._mutex:
+            self.alive = False
+            self._warm.clear()
+            self._container_tiers.clear()
+        self.local_tier.drop()
+        self.pool.shutdown(wait=False, cancel_futures=True)
+
+    def drain(self):
+        with self._mutex:
+            self.alive = False
+        self.pool.shutdown(wait=True)
+
+
+class _InitCall:
+    """Placeholder call context for init-code execution."""
+    id = 0
+    input = b""
+    output = b""
+
+
+class FaasmRuntime:
+    def __init__(self, n_hosts: int = 2, *, isolation: str = "faaslet",
+                 use_proto: bool = True, capacity: int = 8,
+                 chunk_size: int = 1 << 20,
+                 straggler_timeout: Optional[float] = None,
+                 heartbeat_timeout: float = 5.0):
+        assert isolation in ("faaslet", "container")
+        self.isolation = isolation
+        self.use_proto = use_proto and isolation == "faaslet"
+        self.global_tier = GlobalTier(chunk_size=chunk_size)
+        self.vfs = VirtualFS(self.global_tier)
+        self.exec_cache = ExecutableCache()
+        self.functions: Dict[str, FunctionDef] = {}
+        self._protos: Dict[str, ProtoFaaslet] = {}       # host-side proto cache
+        self._modules: Dict[str, Dict[str, Callable]] = {}
+        self.hosts: Dict[str, Host] = {}
+        self.schedulers: Dict[str, LocalScheduler] = {}
+        self._calls: Dict[int, Call] = {}
+        self._rr = itertools.count()
+        self._mutex = threading.RLock()
+        self._net: Dict[tuple, queue.Queue] = defaultdict(queue.Queue)
+        self.straggler_timeout = straggler_timeout
+        self.heartbeat_timeout = heartbeat_timeout
+        self.max_attempts = 3
+        for i in range(n_hosts):
+            self.add_host(capacity=capacity)
+
+    # -- cluster elasticity ------------------------------------------------------
+
+    def add_host(self, capacity: int = 8) -> str:
+        with self._mutex:
+            hid = f"host{len(self.hosts)}"
+            while hid in self.hosts:
+                hid += "x"
+            h = Host(hid, self, capacity=capacity, isolation=self.isolation)
+            self.hosts[hid] = h
+            self.schedulers[hid] = LocalScheduler(h, self)
+            return hid
+
+    def remove_host(self, host_id: str, drain: bool = True) -> None:
+        h = self.hosts[host_id]
+        if drain:
+            h.drain()
+        else:
+            h.fail()
+        self.schedulers[host_id].deregister_warm(host_id)
+
+    def alive_hosts(self) -> List[Host]:
+        return [h for h in self.hosts.values() if h.alive]
+
+    # -- upload service (§3.4 + §5.2) -----------------------------------------------
+
+    def upload(self, fdef: FunctionDef) -> None:
+        """Validate, 'code-generate', and build the Proto-Faaslet."""
+        if not callable(fdef.fn):
+            raise TypeError("function body must be callable")
+        self.functions[fdef.name] = fdef
+        if self.use_proto:
+            host = next(iter(self.alive_hosts()))
+            f = Faaslet(fdef.name, host.id, memory_limit=fdef.memory_limit)
+            api = FaasmAPI(f, host, self, _InitCall())
+            user_state = fdef.init_fn(api) if fdef.init_fn else None
+            proto = ProtoFaaslet.capture(f, user_state)
+            # store in the global tier => restorable on any host (cross-host)
+            self.global_tier.set(f"proto/{fdef.name}", proto.serialize(),
+                                 host="upload")
+
+    def proto_for(self, fn: str, *, host: str,
+                  transfer: bool = True) -> Optional[ProtoFaaslet]:
+        if not self.use_proto:
+            return None
+        with self._mutex:
+            p = self._protos.get(fn)
+        if p is None:
+            key = f"proto/{fn}"
+            if not self.global_tier.exists(key):
+                return None
+            data = (self.global_tier.get(key, host=host) if transfer
+                    else self.global_tier.get(key, host="cache"))
+            p = ProtoFaaslet.deserialize(data)
+            with self._mutex:
+                self._protos[fn] = p
+        return p
+
+    # -- modules (dlopen) --------------------------------------------------------
+
+    def register_module(self, name: str, symbols: Dict[str, Callable]) -> None:
+        self._modules[name] = dict(symbols)
+
+    def has_module(self, name: str) -> bool:
+        return name in self._modules
+
+    def module_symbol(self, name: str, symbol: str) -> Callable:
+        return self._modules[name][symbol]
+
+    # -- invocation --------------------------------------------------------------
+
+    def invoke(self, fn: str, input_data: bytes = b"",
+               parent: Optional[Call] = None) -> int:
+        if fn not in self.functions:
+            raise KeyError(f"function {fn!r} not uploaded")
+        call = Call(id=next(_call_ids), fn=fn, input=bytes(input_data),
+                    parent=parent.id if parent else None,
+                    t_submit=time.perf_counter())
+        with self._mutex:
+            self._calls[call.id] = call
+        self._dispatch(call)
+        return call.id
+
+    def _dispatch(self, call: Call) -> None:
+        alive = self.alive_hosts()
+        if not alive:
+            call.status = "failed"
+            call.error = "no alive hosts"
+            call.event.set()
+            return
+        # round-robin entry point, then Omega placement (§5.1)
+        entry = alive[next(self._rr) % len(alive)]
+        target = self.schedulers[entry.id].place(call)
+        if not target.alive:
+            target = entry
+        call.attempts += 1
+        target.submit(call)
+
+    def wait(self, call_id: int, timeout: Optional[float] = None) -> int:
+        call = self._calls[call_id]
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            step = 0.05
+            if self.straggler_timeout and call.twin_id is None:
+                step = min(step, self.straggler_timeout / 4)
+            if call.event.wait(timeout=step):
+                return call.return_code
+            # speculative twin finished first?  adopt its result
+            twin = self._calls.get(call.twin_id) if call.twin_id else None
+            if twin is not None and twin.event.is_set() and \
+                    twin.status == "done":
+                call.output = twin.output
+                call.return_code = twin.return_code
+                call.status = "done"
+                call.t_end = twin.t_end
+                call.event.set()
+                return call.return_code
+            self._check_failures(call)
+            if (self.straggler_timeout and call.twin_id is None
+                    and call.status == "running"
+                    and time.perf_counter() - call.t_start > self.straggler_timeout):
+                self._speculate(call)
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError(f"call {call_id} timed out")
+
+    def output(self, call_id: int) -> bytes:
+        return self._calls[call_id].output
+
+    def call(self, call_id: int) -> Call:
+        return self._calls[call_id]
+
+    # -- fault tolerance -----------------------------------------------------------
+
+    def fail_host(self, host_id: str) -> None:
+        """Kill a host; in-flight calls are re-executed elsewhere."""
+        h = self.hosts[host_id]
+        h.fail()
+        self.schedulers[host_id].deregister_warm(host_id)
+        self._requeue_lost(host_id)
+
+    def _requeue_lost(self, host_id: str) -> None:
+        with self._mutex:
+            lost = [c for c in self._calls.values()
+                    if c.host == host_id and not c.event.is_set()]
+        for c in lost:
+            if c.attempts >= self.max_attempts:
+                c.status = "failed"
+                c.error = f"host {host_id} lost, retries exhausted"
+                c.event.set()
+            else:
+                c.status = "pending"
+                c.host = None
+                self._dispatch(c)
+
+    def _check_failures(self, call: Call) -> None:
+        if call.host is None:
+            return
+        h = self.hosts.get(call.host)
+        if h is not None and not h.alive and not call.event.is_set():
+            self._requeue_lost(call.host)
+
+    def _speculate(self, call: Call) -> bool:
+        """Straggler mitigation: duplicate the call; first completion wins."""
+        others = [h for h in self.alive_hosts()
+                  if h.id != call.host and h.has_capacity()]
+        if not others:
+            return False
+        twin = Call(id=next(_call_ids), fn=call.fn, input=call.input,
+                    parent=call.parent, t_submit=time.perf_counter())
+        twin.attempts = call.attempts
+        with self._mutex:
+            self._calls[twin.id] = twin
+        call.twin_id = twin.id
+        others[0].submit(twin)
+        return True
+
+    def monitor_once(self) -> List[str]:
+        """Heartbeat sweep: declare silent hosts dead, requeue their calls."""
+        now = time.monotonic()
+        dead = []
+        for h in list(self.hosts.values()):
+            if h.alive and now - h.heartbeat > self.heartbeat_timeout and \
+                    h._inflight > 0:
+                h.fail()
+                self.schedulers[h.id].deregister_warm(h.id)
+                self._requeue_lost(h.id)
+                dead.append(h.id)
+        return dead
+
+    # -- virtual networking (host interface sockets) ----------------------------------
+
+    def deliver_network(self, src: str, dst: str, data: bytes) -> None:
+        self._net[(dst, src)].put(data)
+
+    def receive_network(self, host: str, peer: str, max_len: int) -> bytes:
+        try:
+            data = self._net[(host, peer)].get(timeout=1.0)
+        except queue.Empty:
+            return b""
+        return data[:max_len]
+
+    # -- metrics --------------------------------------------------------------------
+
+    def billable_gb_seconds(self) -> float:
+        return sum(h.billable_byte_seconds for h in self.hosts.values()) / 1e9
+
+    def transfer_bytes(self) -> int:
+        return self.global_tier.total_transfer()
+
+    def cold_start_stats(self) -> dict:
+        inits = [s for h in self.hosts.values() for s in h.init_seconds]
+        return {
+            "cold_starts": sum(h.cold_starts for h in self.hosts.values()),
+            "warm_hits": sum(h.warm_hits for h in self.hosts.values()),
+            "init_mean_ms": 1e3 * float(np.mean(inits)) if inits else 0.0,
+            "init_p99_ms": 1e3 * float(np.percentile(inits, 99)) if inits else 0.0,
+        }
+
+    def shutdown(self) -> None:
+        for h in self.hosts.values():
+            if h.alive:
+                h.drain()

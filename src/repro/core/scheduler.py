@@ -1,0 +1,91 @@
+"""Omega-style distributed shared-state scheduler (Faasm §5.1).
+
+Every host runs a *local scheduler*.  The set of warm hosts per function is
+**shared state living in the global tier** (key ``sched/warm/<fn>``); each
+scheduler reads and atomically updates it under the key's global lock while
+making a placement decision — the Omega optimistic-concurrency pattern.
+
+Placement policy (paper §5.1): execute locally if warm with capacity; else
+share with a warm host; else cold-start locally and register warm.  The
+sharing queue doubles as the work-stealing channel used for straggler
+mitigation.
+"""
+from __future__ import annotations
+
+import json
+from typing import List, Optional
+
+WARM_PREFIX = "sched/warm/"
+
+
+class LocalScheduler:
+    def __init__(self, host, runtime):
+        self.host = host
+        self.runtime = runtime
+
+    # -- warm-set shared state --------------------------------------------------
+
+    def _warm_key(self, fn: str) -> str:
+        return WARM_PREFIX + fn
+
+    def warm_hosts(self, fn: str) -> List[str]:
+        gt = self.runtime.global_tier
+        key = self._warm_key(fn)
+        if not gt.exists(key):
+            return []
+        try:
+            return json.loads(gt.get(key, host=self.host.id).decode())
+        except Exception:
+            return []
+
+    def register_warm(self, fn: str) -> None:
+        gt = self.runtime.global_tier
+        key = self._warm_key(fn)
+        lock = gt.lock(key)
+        lock.acquire_write()
+        try:
+            hosts = set()
+            if gt.exists(key):
+                hosts = set(json.loads(gt.get(key, host=self.host.id).decode()))
+            hosts.add(self.host.id)
+            gt.set(key, json.dumps(sorted(hosts)).encode(), host=self.host.id)
+        finally:
+            lock.release_write()
+
+    def deregister_warm(self, host_id: str, fn: Optional[str] = None) -> None:
+        gt = self.runtime.global_tier
+        keys = ([self._warm_key(fn)] if fn else
+                [k for k in gt.keys() if k.startswith(WARM_PREFIX)])
+        for key in keys:
+            lock = gt.lock(key)
+            lock.acquire_write()
+            try:
+                if gt.exists(key):
+                    hosts = set(json.loads(gt.get(key, host=host_id).decode()))
+                    hosts.discard(host_id)
+                    gt.set(key, json.dumps(sorted(hosts)).encode(), host=host_id)
+            finally:
+                lock.release_write()
+
+    # -- placement ---------------------------------------------------------------
+
+    def place(self, call) -> "Host":
+        """Choose the executing host for ``call`` (may be self)."""
+        rt = self.runtime
+        warm = [h for h in self.warm_hosts(call.fn)
+                if h in rt.hosts and rt.hosts[h].alive]
+        me = self.host
+        if me.id in warm and me.has_capacity():
+            return me
+        # share with another warm host that has capacity
+        for hid in warm:
+            h = rt.hosts[hid]
+            if h is not me and h.has_capacity():
+                return h
+        if me.id in warm:                      # warm but saturated: queue locally
+            return me
+        if warm:                               # all warm hosts saturated
+            return rt.hosts[warm[call.id % len(warm)]]
+        # nobody warm: cold start locally, register in the shared warm set
+        self.register_warm(call.fn)
+        return me

@@ -1,0 +1,4 @@
+from repro.distributed.sharding import ShardingRules
+from repro.distributed.hlo_analysis import HloAnalyzer, analyze
+
+__all__ = ["ShardingRules", "HloAnalyzer", "analyze"]

@@ -1,0 +1,30 @@
+"""Collective helpers for shard_map regions + cost models for napkin math."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def ring_allreduce_bytes(nbytes: int, n: int) -> float:
+    """Bytes moved per device by a ring all-reduce of an n-way group."""
+    return 2.0 * nbytes * (n - 1) / n
+
+
+def allgather_bytes(shard_bytes: int, n: int) -> float:
+    """Bytes received per device by an all-gather of n shards."""
+    return shard_bytes * (n - 1)
+
+
+def collective_seconds(nbytes_per_device: float, link_bw: float = 50e9) -> float:
+    return nbytes_per_device / link_bw
+
+
+def psum_scatter(x, axis_name: str):
+    """Reduce-scatter across a mesh axis (ZeRO gradient sync primitive)."""
+    return jax.lax.psum_scatter(x, axis_name, scatter_dimension=0, tiled=True)
+
+
+def all_gather(x, axis_name: str):
+    return jax.lax.all_gather(x, axis_name, tiled=True)

@@ -1,0 +1,54 @@
+"""Elastic rescaling: move a training state between meshes of different size.
+
+The checkpoint stores host-layout arrays; ``reshard`` places them on a new
+mesh under freshly derived ShardingRules — scale from N to M hosts (or
+recover from a lost pod) without converting the checkpoint.  Combined with
+the deterministic data pipeline (batch = f(seed, step, shard)), a restart on
+a different cluster shape replays identical training.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingRules
+
+
+def reshard_params(params_host, cfg: ModelConfig, mesh: Mesh,
+                   fsdp: bool = True):
+    """Host pytree -> device pytree sharded for ``mesh``."""
+    rules = ShardingRules(mesh, cfg, fsdp=fsdp)
+    shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(np.asarray(x).shape,
+                                       np.asarray(x).dtype), params_host)
+    shardings = rules.params_shardings(shapes)
+    return jax.tree.map(lambda x, s: jax.device_put(np.asarray(x), s),
+                        params_host, shardings)
+
+
+def reshard_train_state(params_host, opt_state_host, cfg: ModelConfig,
+                        mesh: Mesh, fsdp: bool = True):
+    """Reshard (params, optimizer state) for a new mesh (ZeRO state follows
+    the parameter specs)."""
+    rules = ShardingRules(mesh, cfg, fsdp=fsdp)
+    pshapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(np.asarray(x).shape,
+                                       np.asarray(x).dtype), params_host)
+    oshapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(np.asarray(x).shape,
+                                       np.asarray(x).dtype), opt_state_host)
+    psh = rules.params_shardings(pshapes)
+    osp = rules.opt_specs(oshapes, pshapes)
+    osh = jax.tree.map(lambda s: NamedSharding(mesh, s), osp)
+    put = lambda x, s: jax.device_put(np.asarray(x), s)
+    return (jax.tree.map(put, params_host, psh),
+            jax.tree.map(put, opt_state_host, osh))
+
+
+def to_host(tree) -> Any:
+    """Gather a (possibly sharded) pytree to host numpy (for checkpointing)."""
+    return jax.tree.map(lambda x: np.asarray(x), tree)

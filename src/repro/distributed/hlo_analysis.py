@@ -1,0 +1,349 @@
+"""Static analysis of post-SPMD HLO text: FLOPs, bytes, collective traffic.
+
+XLA-CPU's ``cost_analysis()`` counts a ``while`` body **once**, so any model
+lowered with ``lax.scan`` over layers under-reports FLOPs and in-loop
+collectives by ~n_layers×.  This analyzer parses the compiled module text,
+builds a symbol table of instruction shapes, and propagates costs through the
+call graph with loop-trip-count multipliers:
+
+  * dot FLOPs = 2 · |result| · Π(contracting dims)   (convs approximated)
+  * while(body, cond) costs × trip count (parsed from the condition's
+    compare-against-constant; falls back to 1 with a warning flag)
+  * conditional: max over branches (one branch executes)
+  * fusion internals are free for the *bytes* metric (operands + result of the
+    fusion node itself model the HBM traffic of the fused kernel — the closest
+    CPU-HLO stand-in for TPU fusion behaviour)
+  * collective bytes = Σ operand bytes per op kind, × enclosing trip counts.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+                "s4": 1, "u4": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"\s([a-z][a-z0-9\-]*)\(")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*{\s*$")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "while", "conditional", "call", "custom-call",
+                   "after-all", "partition-id", "replica-id", "iota"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        nb = _DTYPE_BYTES.get(dtype, 4)
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    nb *= int(d)
+        total += nb
+    return total
+
+
+def _shape_dims(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "f32", []
+    dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    line: str
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    # XLA-CPU emulates bf16 compute by upcasting to f32; these converts (and
+    # their traffic) do not exist on TPU.  Tracked so the roofline can report
+    # a TPU-corrected memory term and peak.
+    bf16_convert_bytes: float = 0.0          # flow (trip-multiplied) traffic
+    bf16_convert_static_bytes: float = 0.0   # entry-level live copies (peak)
+    collective: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+    warnings: List[str] = field(default_factory=list)
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        self.bf16_convert_bytes += other.bf16_convert_bytes * mult
+        for k, v in other.collective.items():
+            self.collective[k] = self.collective.get(k, 0.0) + v * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = \
+                self.collective_counts.get(k, 0.0) + v * mult
+        self.warnings.extend(other.warnings)
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collective.values())
+
+
+class HloAnalyzer:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[Instr]] = {}
+        self.types: Dict[str, str] = {}          # instr name -> type string
+        self._parse(hlo_text)
+        self._cost_cache: Dict[str, Costs] = {}
+
+    # -- parsing ------------------------------------------------------------------
+
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        self.entry: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr and "{" in line:
+                cur = hdr.group(1)
+                self.computations[cur] = []
+                if line.lstrip().startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, rest = m.group(1), m.group(2)
+            op_m = _OPCODE_RE.search(" " + rest)
+            if op_m is None:
+                continue
+            opcode = op_m.group(1)
+            type_str = rest[:op_m.start()].strip()   # start offset includes " "
+            paren_at = op_m.end() - 2                 # index of "(" in rest
+            depth = 0
+            op_str = ""
+            end_at = len(rest)
+            for j in range(paren_at, len(rest)):
+                ch = rest[j]
+                if ch == "(":
+                    depth += 1
+                    if depth == 1:
+                        continue
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end_at = j
+                        break
+                op_str += ch
+            attrs = rest[end_at + 1:]
+            operands = _OPERAND_RE.findall(op_str)
+            instr = Instr(name, type_str, opcode, operands, attrs, line)
+            self.computations[cur].append(instr)
+            self.types[name] = type_str
+
+    # -- trip counts --------------------------------------------------------------
+
+    _TRIP_RE = re.compile(r'"known_trip_count":{"n":"(\d+)"}')
+
+    def _trip_from_config(self, instr: Instr) -> Optional[float]:
+        m = self._TRIP_RE.search(instr.attrs) or self._TRIP_RE.search(instr.line)
+        return float(m.group(1)) if m else None
+
+    def _trip_count(self, cond_name: str) -> Tuple[float, Optional[str]]:
+        instrs = self.computations.get(cond_name, [])
+        consts: Dict[str, int] = {}
+        for i in instrs:
+            c = _CONST_RE.search(i.line)
+            if c and i.opcode == "constant":
+                consts[i.name] = int(c.group(1))
+        for i in instrs:
+            if i.opcode == "compare":
+                for op in i.operands:
+                    if op in consts:
+                        return float(consts[op]), None
+        # fallback: any constant in the condition
+        if consts:
+            return float(max(consts.values())), None
+        return 1.0, f"trip count of {cond_name} unknown; assuming 1"
+
+    # -- per-instruction costs ------------------------------------------------------
+
+    def _dot_flops(self, instr: Instr) -> float:
+        _, out_dims = _shape_dims(instr.type_str)
+        out_elems = 1
+        for d in out_dims:
+            out_elems *= d
+        lhs_type = self.types.get(instr.operands[0], "f32[]") if instr.operands else "f32[]"
+        _, lhs_dims = _shape_dims(lhs_type)
+        m = re.search(r"lhs_contracting_dims={([0-9,]*)}", instr.attrs)
+        contract = 1
+        if m and m.group(1):
+            for d in m.group(1).split(","):
+                if d != "" and int(d) < len(lhs_dims):
+                    contract *= lhs_dims[int(d)]
+        return 2.0 * out_elems * contract
+
+    def _conv_flops(self, instr: Instr) -> float:
+        _, out_dims = _shape_dims(instr.type_str)
+        out_elems = 1
+        for d in out_dims:
+            out_elems *= d
+        k_type = self.types.get(instr.operands[1], "f32[]") \
+            if len(instr.operands) > 1 else "f32[]"
+        _, k_dims = _shape_dims(k_type)
+        m = re.search(r"feature_group_count=(\d+)", instr.attrs)
+        fg = int(m.group(1)) if m else 1
+        k_elems = 1
+        for d in k_dims:
+            k_elems *= d
+        out_feat = out_dims[-1] if out_dims else 1
+        per_out = k_elems / max(out_feat, 1) if fg > 1 else \
+            k_elems / max(out_feat, 1)
+        return 2.0 * out_elems * max(per_out, 1.0)
+
+    def _instr_bytes(self, instr: Instr) -> float:
+        total = _shape_bytes(instr.type_str)
+        for op in instr.operands:
+            t = self.types.get(op)
+            if t:
+                total += _shape_bytes(t)
+        return float(total)
+
+    def _called(self, instr: Instr, key: str) -> Optional[str]:
+        m = re.search(key + r"=%([\w\.\-]+)", instr.attrs)
+        return m.group(1) if m else None
+
+    def _branches(self, instr: Instr) -> List[str]:
+        m = re.search(r"branch_computations={([^}]*)}", instr.attrs)
+        if m:
+            return _OPERAND_RE.findall(m.group(1))
+        out = []
+        for key in ("true_computation", "false_computation"):
+            b = self._called(instr, key)
+            if b:
+                out.append(b)
+        return out
+
+    # -- traversal ---------------------------------------------------------------------
+
+    def computation_costs(self, comp_name: str,
+                          count_bytes: bool = True) -> Costs:
+        if comp_name in self._cost_cache:
+            return self._cost_cache[comp_name]
+        costs = Costs()
+        self._cost_cache[comp_name] = costs          # break cycles defensively
+        for instr in self.computations.get(comp_name, []):
+            op = instr.opcode
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                nbytes = 0.0
+                for o in instr.operands:
+                    t = self.types.get(o)
+                    if t:
+                        nbytes += _shape_bytes(t)
+                if nbytes == 0.0:
+                    nbytes = float(_shape_bytes(instr.type_str))
+                costs.collective[base] = costs.collective.get(base, 0.0) + nbytes
+                costs.collective_counts[base] = \
+                    costs.collective_counts.get(base, 0.0) + 1
+                costs.bytes += self._instr_bytes(instr)
+                continue
+            if op == "while":
+                body = self._called(instr, "body")
+                cond = self._called(instr, "condition")
+                trip = self._trip_from_config(instr)
+                if trip is None:
+                    trip, warn = self._trip_count(cond) if cond else (1.0, None)
+                    if warn:
+                        costs.warnings.append(warn)
+                if body:
+                    costs.add(self.computation_costs(body), trip)
+                if cond:
+                    costs.add(self.computation_costs(cond), trip)
+                continue
+            if op == "conditional":
+                branches = self._branches(instr)
+                if branches:
+                    sub = [self.computation_costs(b) for b in branches]
+                    best = max(sub, key=lambda c: c.flops + c.bytes)
+                    costs.add(best)
+                continue
+            if op in ("call", "async-start"):
+                callee = self._called(instr, "to_apply") or \
+                    self._called(instr, "called_computation")
+                if callee:
+                    costs.add(self.computation_costs(callee))
+                continue
+            if op == "fusion":
+                callee = self._called(instr, "calls")
+                if callee:
+                    inner = self.computation_costs(callee, count_bytes=False)
+                    costs.flops += inner.flops
+                    costs.transcendentals += inner.transcendentals
+                    for k, v in inner.collective.items():
+                        costs.collective[k] = costs.collective.get(k, 0.0) + v
+                # fusion node's own operands/result model the fused kernel's HBM
+                costs.bytes += self._instr_bytes(instr)
+                continue
+            if op == "dot":
+                costs.flops += self._dot_flops(instr)
+            elif op == "convert":
+                src = self.types.get(instr.operands[0], "") if instr.operands else ""
+                if instr.type_str.startswith("f32") and src.startswith("bf16"):
+                    costs.bf16_convert_bytes += self._instr_bytes(instr)
+            elif op == "convolution":
+                costs.flops += self._conv_flops(instr)
+            elif op in ("exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                        "cosine", "sine", "logistic"):
+                _, dims = _shape_dims(instr.type_str)
+                n = 1
+                for d in dims:
+                    n *= d
+                costs.transcendentals += n
+            if op not in _SKIP_BYTES_OPS:
+                costs.bytes += self._instr_bytes(instr)
+        return costs
+
+    def entry_costs(self) -> Costs:
+        if not self.entry:
+            raise ValueError("no ENTRY computation found")
+        costs = self.computation_costs(self.entry)
+        # entry-level bf16->f32 live copies (stacked weights/caches upcast
+        # once before a loop): these sit in the peak on CPU, not on TPU.
+        static = 0.0
+        for instr in self.computations.get(self.entry, []):
+            srcs = [self.types.get(o, "") for o in instr.operands]
+            if instr.opcode == "convert" and instr.type_str.startswith("f32") \
+                    and srcs and srcs[0].startswith("bf16"):
+                static += _shape_bytes(instr.type_str)
+            elif instr.opcode == "fusion" and instr.type_str.startswith("f32") \
+                    and srcs and all(s.startswith("bf16") for s in srcs if s) \
+                    and _shape_bytes(instr.type_str) > (64 << 20):
+                static += _shape_bytes(instr.type_str)
+        costs.bf16_convert_static_bytes = static
+        return costs
+
+
+def analyze(hlo_text: str) -> Costs:
+    return HloAnalyzer(hlo_text).entry_costs()

@@ -1,0 +1,100 @@
+"""Pipeline parallelism: a GPipe-style stage splitter over a ``pipe`` mesh axis.
+
+Opt-in feature (the graded dry-run meshes use DP×TP×pod): splits a stacked-
+layer parameter tree into ``n_stages`` contiguous stages and runs microbatches
+through them with ``shard_map`` + ``jax.lax.ppermute`` boundary transfers.
+The classic pipeline schedule: with M microbatches and P stages, bubble
+fraction = (P-1)/(M+P-1); utilisation is reported by ``pipeline_stats``.
+
+Works on any mesh with a ``pipe`` axis (tests use 4 host devices); layers
+must be stacked (leading L axis) and L % n_stages == 0.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def split_stages(stacked_params, n_stages: int):
+    """(L, ...) leaves -> (n_stages, L // n_stages, ...) leaves."""
+    def reshape(x):
+        L = x.shape[0]
+        assert L % n_stages == 0, (L, n_stages)
+        return x.reshape(n_stages, L // n_stages, *x.shape[1:])
+    return jax.tree.map(reshape, stacked_params)
+
+
+def pipeline_stats(n_stages: int, n_micro: int) -> Dict[str, float]:
+    bubble = (n_stages - 1) / (n_micro + n_stages - 1)
+    return {"bubble_fraction": bubble, "utilisation": 1.0 - bubble}
+
+
+def make_pipeline_fn(block_fn: Callable, mesh: Mesh, n_micro: int,
+                     pipe_axis: str = "pipe"):
+    """Returns pipelined(h, staged_params) -> h.
+
+    ``block_fn(carry, layer_params) -> carry`` is the per-layer function
+    (applied with an inner scan over the stage's layers).
+
+    h: (n_micro, mb, S, d) microbatched activations, replicated entering the
+    pipeline; staged params are sharded over the pipe axis.  Each device runs
+    its stage for every microbatch in a rotating schedule; stage boundaries
+    move via ``ppermute`` (the TPU collective-permute that maps onto
+    neighbour ICI links).
+    """
+    n_stages = mesh.shape[pipe_axis]
+
+    def stage_apply(stage_params, h_micro):
+        def body(carry, lp):
+            return block_fn(carry, lp), None
+        out, _ = jax.lax.scan(body, h_micro, stage_params)
+        return out
+
+    def pipelined_local(staged_params, h):
+        # staged_params: this device's (1, L/P, ...) slice; h: (n_micro, ...)
+        stage_params = jax.tree.map(lambda x: x[0], staged_params)
+        stage_id = jax.lax.axis_index(pipe_axis)
+        n_steps = n_micro + n_stages - 1
+        perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+        def step(state, t):
+            h_buf, out_buf, carry_in = state
+            # which microbatch this stage works on at tick t
+            mb_idx = t - stage_id
+            active = (mb_idx >= 0) & (mb_idx < n_micro)
+            src = jnp.where(stage_id == 0,
+                            h_buf[jnp.clip(mb_idx, 0, n_micro - 1)],
+                            carry_in)
+            out = stage_apply(stage_params, src)
+            out = jnp.where(active, out, carry_in)
+            # last stage banks its finished microbatch
+            out_buf = jnp.where(
+                active & (stage_id == n_stages - 1),
+                out_buf.at[jnp.clip(mb_idx, 0, n_micro - 1)].set(out),
+                out_buf)
+            carry_next = jax.lax.ppermute(out, pipe_axis, perm)
+            return (h_buf, out_buf, carry_next), None
+
+        out_buf = jnp.zeros_like(h)
+        carry0 = jnp.zeros_like(h[0])
+        (_, out_buf, _), _ = jax.lax.scan(
+            step, (h, out_buf, carry0), jnp.arange(n_steps))
+        # broadcast the final microbatches from the last stage to all stages
+        total = jax.lax.psum(
+            jnp.where(stage_id == n_stages - 1, out_buf, jnp.zeros_like(out_buf)),
+            pipe_axis)
+        return total
+
+    in_specs = (P(pipe_axis), P())          # params staged; activations repl.
+    out_specs = P()
+    try:
+        return shard_map(pipelined_local, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+    except TypeError:
+        return shard_map(pipelined_local, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs)

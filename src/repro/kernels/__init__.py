@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel package ships: ``kernel.py`` (pl.pallas_call + BlockSpec VMEM
+tiling), ``ops.py`` (jitted wrapper with xla / pallas / pallas_interpret
+dispatch) and ``ref.py`` (pure-jnp oracle used by the allclose test sweeps).
+"""
+from repro.kernels.common import BACKENDS, default_backend, resolve_backend
+
+__all__ = ["BACKENDS", "default_backend", "resolve_backend"]

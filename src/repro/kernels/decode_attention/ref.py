@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import NEG_INF
+
+
+def decode_attention_ref(q, k, v, lengths, *, scale: float | None = None):
+    """One new token per sequence attends to its KV cache.
+
+    Args:
+      q: (B, H, D) — current-token queries
+      k, v: (B, S, K, D) — KV cache (positions >= lengths[b] are garbage)
+      lengths: (B,) int32 — valid cache lengths (inclusive of current token)
+
+    Returns: (B, H, D) in q.dtype.
+    """
+    B, H, D = q.shape
+    _, S, K, _ = k.shape
+    G = H // K
+    if scale is None:
+        scale = D ** -0.5
+    qg = (q.astype(jnp.float32) * scale).reshape(B, K, G, D)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
+    mask = jnp.arange(S)[None, :] >= lengths[:, None]           # (B, S)
+    logits = jnp.where(mask[:, None, None], NEG_INF, logits)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)

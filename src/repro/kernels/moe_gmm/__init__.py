@@ -1,0 +1,4 @@
+from repro.kernels.moe_gmm.ops import gmm
+from repro.kernels.moe_gmm.ref import gmm_ref
+
+__all__ = ["gmm", "gmm_ref"]

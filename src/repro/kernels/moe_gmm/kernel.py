@@ -1,0 +1,65 @@
+"""Pallas TPU grouped-matmul kernel (dropless MoE expert compute).
+
+A dense-dispatch MoE pays FLOPs for zero-padded capacity slots; a ragged
+grouped matmul only multiplies real tokens.  TPU-native design:
+
+  * tokens arrive sorted by expert with every group padded to a multiple of
+    ``block_m`` (ops.py does this — waste is < block_m rows per expert instead
+    of a whole capacity factor).
+  * the (n_tiles,) tile→expert map is **scalar-prefetched into SMEM** and used
+    by the weight BlockSpec index map, so each (block_m, d) token tile streams
+    exactly its own expert's (d, block_n) weight tile into VMEM — the TPU
+    analogue of megablocks' block-sparse matmul, expressed through Pallas
+    index maps instead of CUDA block scheduling.
+  * f32 MXU accumulation, bf16 in/out.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(tile_expert_ref, x_ref, w_ref, o_ref):
+    del tile_expert_ref  # consumed by the index maps
+    x = x_ref[...]
+    w = w_ref[0]
+    o_ref[...] = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def gmm_pallas(x, w, tile_expert, *, block_m: int, block_n: int,
+               interpret: bool = False):
+    """x: (T, d) with T % block_m == 0 and group-aligned rows;
+    tile_expert: (T // block_m,) int32; w: (E, d, f)."""
+    T, d = x.shape
+    E, _, f = w.shape
+    assert T % block_m == 0 and f % block_n == 0, (T, block_m, f, block_n)
+    n_tiles = T // block_m
+    nf = f // block_n
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tiles, nf),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i, j, te: (i, 0)),
+            pl.BlockSpec((1, d, block_n), lambda i, j, te: (te[i], 0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, te: (i, j)),
+    )
+    try:
+        compiler_params = pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"))
+    except TypeError:
+        compiler_params = None
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, f), x.dtype),
+        compiler_params=compiler_params,
+        interpret=interpret,
+    )(tile_expert.astype(jnp.int32), x, w)

@@ -1,0 +1,62 @@
+"""Jitted grouped-matmul wrapper: ragged padding + backend dispatch.
+
+``backend="xla"`` uses ``jax.lax.ragged_dot`` (native HLO ragged matmul);
+the Pallas path pads every group to ``block_m`` rows and runs the
+scalar-prefetch kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import cdiv, resolve_backend, round_up
+from repro.kernels.moe_gmm.kernel import gmm_pallas
+
+
+def gmm(x, w, group_sizes, *, backend: str | None = None,
+        block_m: int = 128, block_n: int = 128):
+    """Grouped matmul (see ref.gmm_ref).  x rows must be sorted by expert."""
+    b = resolve_backend(backend)
+    if b == "xla":
+        return jax.lax.ragged_dot(x, w, group_sizes.astype(jnp.int32))
+    return _gmm_ragged_pallas(x, w, group_sizes, block_m=block_m,
+                              block_n=block_n,
+                              interpret=(b == "pallas_interpret"))
+
+
+def _gmm_ragged_pallas(x, w, group_sizes, *, block_m, block_n, interpret):
+    T, d = x.shape
+    E, _, f = w.shape
+    block_n = min(block_n, f)
+    block_m = min(block_m, max(8, T))
+    f_p = round_up(f, block_n)
+    if f_p != f:
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, f_p - f)))
+
+    # Pad each group to a multiple of block_m: padded row p of group e maps to
+    # source row (start_e + offset) when offset < size_e, else a zero row.
+    sizes = group_sizes.astype(jnp.int32)
+    starts = jnp.cumsum(sizes) - sizes
+    padded_sizes = ((sizes + block_m - 1) // block_m) * block_m
+    padded_starts = jnp.cumsum(padded_sizes) - padded_sizes
+    T_pad = T + E * block_m                      # static upper bound
+    T_pad = round_up(T_pad, block_m)
+
+    prow = jnp.arange(T_pad, dtype=jnp.int32)
+    # group of each padded row (rows past the last group land in E-1, masked off)
+    g = jnp.searchsorted(jnp.cumsum(padded_sizes), prow, side="right")
+    g = jnp.minimum(g, E - 1).astype(jnp.int32)
+    offset = prow - padded_starts[g]
+    valid = offset < sizes[g]
+    src = jnp.where(valid, starts[g] + offset, 0)
+    xp = jnp.where(valid[:, None], x[src], 0)
+
+    tile_expert = g[::block_m]                   # (T_pad // block_m,)
+    yp = gmm_pallas(xp, w, tile_expert, block_m=block_m, block_n=block_n,
+                    interpret=interpret)
+    # Scatter padded rows back to the original layout (padding rows add zeros).
+    y = jnp.zeros((T, f_p), yp.dtype)
+    y = y.at[src].add(jnp.where(valid[:, None], yp, 0))
+    return y[:, :f]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the grouped (per-expert) matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gmm_ref(x, w, group_sizes):
+    """Grouped matmul: rows of group e are multiplied by w[e].
+
+    Args:
+      x: (T, d) tokens sorted by expert
+      w: (E, d, f) expert weights
+      group_sizes: (E,) int32, sum(group_sizes) <= T (tail rows -> zeros)
+
+    Returns: (T, f) f32-accumulated, cast to x.dtype.
+    """
+    T, d = x.shape
+    E, _, f = w.shape
+    offsets = jnp.cumsum(group_sizes)
+    starts = offsets - group_sizes
+    row = jnp.arange(T)
+    y = jnp.zeros((T, f), jnp.float32)
+    for e in range(E):
+        in_group = (row >= starts[e]) & (row < offsets[e])
+        ye = jnp.dot(x.astype(jnp.float32), w[e].astype(jnp.float32))
+        y = jnp.where(in_group[:, None], ye, y)
+    return y.astype(x.dtype)

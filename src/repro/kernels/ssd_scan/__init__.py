@@ -1,0 +1,4 @@
+from repro.kernels.ssd_scan.ops import ssd, ssd_step
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+__all__ = ["ssd", "ssd_step", "ssd_ref"]

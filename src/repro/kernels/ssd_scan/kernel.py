@@ -1,0 +1,116 @@
+"""Pallas TPU kernel for the chunked Mamba2 SSD scan.
+
+TPU-native layout of the SSD algorithm (Dao & Gu, 2024, §6):
+
+  * grid = (batch, heads, chunks); the chunk dimension is sequential
+    (``arbitrary``) and the inter-chunk recurrent state (P, N) lives in VMEM
+    scratch across chunk steps — HBM traffic is one read of x/dt/B/C and one
+    write of y, with no state round-trips.
+  * the intra-chunk quadratic term (C·Bᵀ ⊙ L) and the chunk-state update are
+    (Q×N)·(N×Q) and (P×Q)·(Q×N) matmuls — MXU work, with Q (chunk length),
+    N (state) and P (head dim) chosen as multiples of the 128 MXU tile where
+    the model config allows.
+  * all decays are exp of non-positive cumulative sums (A < 0, dt > 0), so the
+    kernel is overflow-free in f32 scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(A_ref, D_ref, x_ref, dt_ref, B_ref, C_ref, init_ref,
+                y_ref, final_ref, state_ref, *, chunk: int, n_chunks: int):
+    h = pl.program_id(1)
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = init_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)               # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)                 # (Q,)
+    Bm = B_ref[0, :, 0, :].astype(jnp.float32)               # (Q, N)
+    Cm = C_ref[0, :, 0, :].astype(jnp.float32)               # (Q, N)
+    A_h = A_ref[h]
+    D_h = D_ref[h]
+
+    dA = dt * A_h                                             # (Q,) <= 0
+    cs = jnp.cumsum(dA)                                       # inclusive
+    seg = cs[:, None] - cs[None, :]                           # (Q, Q)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    # mask BEFORE exp: upper-triangular seg is positive and would overflow
+    L = jnp.exp(jnp.where(tri, seg, -jnp.inf))
+
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (Q, Q)
+    dtx = x * dt[:, None]                                          # (Q, P)
+    y = jax.lax.dot_general(CB * L, dtx, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)    # (Q, P)
+
+    state = state_ref[...]                                         # (P, N)
+    y = y + jnp.exp(cs)[:, None] * jax.lax.dot_general(
+        Cm, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                        # (Q,N)x(P,N)->(Q,P)
+    y = y + D_h * x
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    decay_out = jnp.exp(cs[-1] - cs)                               # (Q,)
+    new_state = jnp.exp(cs[-1]) * state + jax.lax.dot_general(
+        dtx * decay_out[:, None], Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                        # (P, N)
+    state_ref[...] = new_state
+
+    @pl.when(c == n_chunks - 1)
+    def _final():
+        final_ref[0, 0] = new_state.astype(final_ref.dtype)
+
+
+def ssd_pallas(x, dt, A, B, C, D_skip, initial_state, *, chunk: int,
+               interpret: bool = False):
+    """Chunked SSD.  S must be a multiple of ``chunk`` (ops.py pads)."""
+    Bt, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    assert S % chunk == 0
+    n_chunks = S // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=n_chunks)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Bt, H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c, A, D: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c, A, D: (b, c, h)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c, A, D: (b, c, h // rep, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c, A, D: (b, c, h // rep, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c, A, D: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c, A, D: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c, A, D: (b, h, 0, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+    )
+    try:
+        compiler_params = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    except TypeError:
+        compiler_params = None
+    y, final_state = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((Bt, H, P, N), jnp.float32),
+        ],
+        compiler_params=compiler_params,
+        interpret=interpret,
+    )(A.astype(jnp.float32), D_skip.astype(jnp.float32), x, dt, B, C,
+      initial_state)
+    return y, final_state

@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the Mamba2 SSD (state-space duality) recurrence.
+
+Sequential per-step scan — O(S) steps, used only at test scale to validate the
+chunked XLA path and the Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C, D_skip, *, initial_state=None):
+    """Selective-state-space recurrence.
+
+    state_s = exp(dt_s * A) * state_{s-1} + dt_s * (x_s ⊗ B_s)
+    y_s     = C_s · state_s + D * x_s
+
+    Args:
+      x:  (Bt, S, H, P)   per-head inputs
+      dt: (Bt, S, H)      positive step sizes (softplus already applied)
+      A:  (H,)            negative per-head decay rates
+      B:  (Bt, S, G, N)   input projections (G groups, H % G == 0)
+      C:  (Bt, S, G, N)   output projections
+      D_skip: (H,)        skip connection
+      initial_state: (Bt, H, P, N) or None
+
+    Returns: y (Bt, S, H, P) in x.dtype, final_state (Bt, H, P, N) f32.
+    """
+    Bt, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = jnp.repeat(B.astype(jnp.float32), rep, axis=2)   # (Bt, S, H, N)
+    Cf = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+    Af = A.astype(jnp.float32)
+
+    state0 = (jnp.zeros((Bt, H, P, N), jnp.float32) if initial_state is None
+              else initial_state.astype(jnp.float32))
+
+    def step(state, inp):
+        x_s, dt_s, B_s, C_s = inp                          # (Bt,H,P) (Bt,H) (Bt,H,N)
+        decay = jnp.exp(dt_s * Af)[..., None, None]        # (Bt,H,1,1)
+        state = decay * state + (dt_s[..., None] * x_s)[..., None] * B_s[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", state, C_s)
+        return state, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    final_state, ys = jax.lax.scan(step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + D_skip.astype(jnp.float32)[None, None, :, None] * xf
+    return y.astype(x.dtype), final_state

@@ -1,0 +1,96 @@
+"""Pallas TPU kernels for the fused two-tier state push.
+
+Faasm's push writes a local-tier replica's changes to the global tier.  On a
+TPU host the bandwidth-bound part is three HBM streams (local, base snapshot,
+global) — a naive implementation does delta-compute and apply as two passes
+(5 streams).  These kernels fuse each direction into a single pass:
+
+  * ``quantize_delta``: delta = local − base, per-row (128-lane) absmax scale,
+    int8 payload — one read of each input, one int8 + one f32 write.  The
+    int8 payload is what crosses the pod interconnect (≈ 4× fewer ICI bytes).
+  * ``apply_delta``: global += q·scale — one read each, one write.
+
+Blocks are (block_rows, 128): the minor dim matches the VREG lane width so the
+VPU runs at full occupancy; rows are the streaming dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+
+
+def _quantize_kernel(local_ref, base_ref, q_ref, scale_ref):
+    delta = local_ref[...].astype(jnp.float32) - base_ref[...].astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(delta), axis=1, keepdims=True)
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    q_ref[...] = jnp.clip(jnp.round(delta / scale), -127, 127).astype(jnp.int8)
+    scale_ref[...] = scale
+
+
+def _apply_kernel(global_ref, q_ref, scale_ref, out_ref):
+    out_ref[...] = (global_ref[...].astype(jnp.float32)
+                    + q_ref[...].astype(jnp.float32) * scale_ref[...]
+                    ).astype(out_ref.dtype)
+
+
+def _push_kernel(local_ref, base_ref, global_ref, out_ref):
+    out_ref[...] = (global_ref[...].astype(jnp.float32)
+                    + local_ref[...].astype(jnp.float32)
+                    - base_ref[...].astype(jnp.float32)).astype(out_ref.dtype)
+
+
+def quantize_delta_pallas(local, base, *, block_rows: int = 256,
+                          interpret: bool = False):
+    R, L = local.shape
+    assert L == LANES and R % block_rows == 0, (local.shape, block_rows)
+    grid = (R // block_rows,)
+    spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    sspec = pl.BlockSpec((block_rows, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec, sspec],
+        out_shape=[jax.ShapeDtypeStruct((R, LANES), jnp.int8),
+                   jax.ShapeDtypeStruct((R, 1), jnp.float32)],
+        interpret=interpret,
+    )(local, base)
+
+
+def apply_delta_pallas(global_val, q, scale, *, block_rows: int = 256,
+                       interpret: bool = False):
+    R, L = global_val.shape
+    assert L == LANES and R % block_rows == 0
+    grid = (R // block_rows,)
+    spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    sspec = pl.BlockSpec((block_rows, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        _apply_kernel,
+        grid=grid,
+        in_specs=[spec, spec, sspec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(global_val.shape, global_val.dtype),
+        interpret=interpret,
+    )(global_val, q, scale)
+
+
+def push_pallas(local, base, global_val, *, block_rows: int = 256,
+                interpret: bool = False):
+    R, L = local.shape
+    assert L == LANES and R % block_rows == 0
+    grid = (R // block_rows,)
+    spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        _push_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(global_val.shape, global_val.dtype),
+        interpret=interpret,
+    )(local, base, global_val)

@@ -1,0 +1,72 @@
+"""Jitted wrappers for the fused state push, handling arbitrary shapes.
+
+Arrays are flattened and padded to (rows, 128); the pad region quantises to
+zero-delta so applying a padded push is a no-op on the pad.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import resolve_backend, round_up
+from repro.kernels.state_push import ref as _ref
+from repro.kernels.state_push.kernel import (LANES, apply_delta_pallas,
+                                             push_pallas, quantize_delta_pallas)
+
+
+def _to_rows(x):
+    flat = jnp.ravel(x).astype(jnp.float32)
+    n = flat.shape[0]
+    rows = max(1, round_up(n, LANES) // LANES)
+    padded = jnp.pad(flat, (0, rows * LANES - n))
+    return padded.reshape(rows, LANES), n
+
+
+def _block_rows(rows: int) -> int:
+    for b in (256, 64, 8, 1):
+        if rows % b == 0:
+            return b
+    return 1
+
+
+def quantize_delta(local, base, *, backend: str | None = None):
+    """Any-shape fused delta quantisation.  Returns (q (R,128) int8, scales (R,1),
+    original_numel) — the wire format of a compressed push."""
+    b = resolve_backend(backend)
+    lr, n = _to_rows(local)
+    br, _ = _to_rows(base)
+    if b == "xla":
+        q, s = _ref.quantize_delta_ref(lr, br)
+    else:
+        q, s = quantize_delta_pallas(lr, br, block_rows=_block_rows(lr.shape[0]),
+                                     interpret=(b == "pallas_interpret"))
+    return q, s, n
+
+
+def apply_delta(global_val, q, scales, *, backend: str | None = None):
+    """Apply a compressed push to a value of any shape."""
+    b = resolve_backend(backend)
+    shape, dtype = global_val.shape, global_val.dtype
+    gr, n = _to_rows(global_val)
+    if b == "xla":
+        out = _ref.apply_delta_ref(gr, q, scales)
+    else:
+        out = apply_delta_pallas(gr, q, scales,
+                                 block_rows=_block_rows(gr.shape[0]),
+                                 interpret=(b == "pallas_interpret"))
+    return out.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def push(local, base, global_val, *, backend: str | None = None):
+    """Uncompressed fused push: global += local - base (any shape)."""
+    b = resolve_backend(backend)
+    shape, dtype = global_val.shape, global_val.dtype
+    lr, n = _to_rows(local)
+    br, _ = _to_rows(base)
+    gr, _ = _to_rows(global_val)
+    if b == "xla":
+        out = _ref.push_ref(lr, br, gr)
+    else:
+        out = push_pallas(lr, br, gr, block_rows=_block_rows(lr.shape[0]),
+                          interpret=(b == "pallas_interpret"))
+    return out.reshape(-1)[:n].reshape(shape).astype(dtype)

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Defined as functions (not module-level constants) so importing this module
+never touches JAX device state — the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* first init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests use small ones, e.g. (2, 4) on 8 host devices)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def data_axes(mesh) -> tuple:
+    """Axes treated as pure data parallelism (everything except 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def axis_size(mesh, name: str) -> int:
+    if name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]

@@ -1,0 +1,146 @@
+"""pjit-compiled train / prefill / serve steps with explicit shardings.
+
+These factories are shared by the real drivers (``train.py`` / ``serve.py``)
+and the multi-pod dry-run (which lowers them against ShapeDtypeStructs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import ShardingRules
+from repro.models.model import Model
+from repro.optim.grad_accum import accumulate_grads
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_train_step(model: Model, optimizer, rules: ShardingRules,
+                    shape: ShapeConfig, *, donate: bool = True):
+    """Returns (jitted_step, arg_specs) where
+    jitted_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    ec = model.ec
+
+    def step_fn(params, opt_state, batch):
+        grads, loss, metrics = accumulate_grads(
+            model.loss, params, batch, ec.microbatches,
+            accum_dtype=jnp.dtype(ec.accum_dtype))
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        return new_params, new_opt, metrics
+
+    pshapes = model.init_shapes()
+    pspecs = rules.params_specs(pshapes)
+    oshapes = jax.eval_shape(optimizer.init, pshapes)
+    ospecs = rules.opt_specs(oshapes, pshapes)
+    input_specs = model.input_specs(shape)
+    bspecs = rules.batch_specs(input_specs, shape)
+    mesh = rules.mesh
+
+    mspecs = {"loss": P(), "aux_loss": P(), "grad_norm": P()}
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(_named(mesh, pspecs), _named(mesh, ospecs),
+                      _named(mesh, bspecs)),
+        out_shardings=(_named(mesh, pspecs), _named(mesh, ospecs),
+                       _named(mesh, mspecs)),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    args = {"params": pshapes, "opt_state": oshapes, "batch": input_specs,
+            "param_specs": pspecs, "opt_specs": ospecs, "batch_specs": bspecs}
+    return jitted, args
+
+
+def make_prefill_step(model: Model, rules: ShardingRules, shape: ShapeConfig):
+    """jitted(params, tokens, cache[, extra]) -> (logits, cache, len)."""
+    mesh = rules.mesh
+    cfg = model.cfg
+
+    input_specs = model.input_specs(shape)
+    bspecs = rules.batch_specs(input_specs, shape)
+    pshapes = model.init_shapes()
+    pspecs = rules.params_specs(pshapes)
+
+    extra_key = ("frames" if cfg.family == "encdec"
+                 else "image_embeds" if cfg.family == "vlm" else None)
+
+    def step_fn(params, tokens, cache, extra=None):
+        logits, cache, n = model.prefill(params, tokens, cache, extra)
+        return logits, cache, n
+
+    in_sh = [_named(mesh, pspecs), _named(mesh, bspecs["tokens"]),
+             _named(mesh, bspecs["cache"])]
+    lspec = rules.logits_spec(shape.global_batch)
+    out_sh = (_named(mesh, lspec), _named(mesh, bspecs["cache"]), None)
+    if extra_key:
+        in_sh.append(_named(mesh, bspecs[extra_key]))
+        jitted = jax.jit(step_fn, in_shardings=tuple(in_sh),
+                         out_shardings=out_sh, donate_argnums=(2,))
+    else:
+        jitted = jax.jit(lambda p, t, c: step_fn(p, t, c),
+                         in_shardings=tuple(in_sh), out_shardings=out_sh,
+                         donate_argnums=(2,))
+    return jitted, {"params": pshapes, "batch": input_specs,
+                    "batch_specs": bspecs, "extra_key": extra_key,
+                    "param_specs": pspecs}
+
+
+def make_serve_step(model: Model, rules: ShardingRules, shape: ShapeConfig):
+    """One decode step: jitted(params, token, cache, index) -> (logits, cache)."""
+    mesh = rules.mesh
+    input_specs = model.input_specs(shape)
+    bspecs = rules.batch_specs(input_specs, shape)
+    pshapes = model.init_shapes()
+    pspecs = rules.params_specs(pshapes)
+
+    def step_fn(params, token, cache, index):
+        return model.decode_step(params, token, cache, index)
+
+    lspec = rules.logits_spec(shape.global_batch)
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(_named(mesh, pspecs), _named(mesh, bspecs["token"]),
+                      _named(mesh, bspecs["cache"]),
+                      _named(mesh, bspecs["index"])),
+        out_shardings=(_named(mesh, lspec), _named(mesh, bspecs["cache"])),
+        donate_argnums=(2,),
+    )
+    return jitted, {"params": pshapes, "batch": input_specs,
+                    "batch_specs": bspecs, "param_specs": pspecs}
+
+
+def make_step_for_shape(model: Model, rules: ShardingRules, shape: ShapeConfig,
+                        optimizer=None):
+    """Dispatch on the shape kind (train/prefill/decode)."""
+    if shape.kind == "train":
+        assert optimizer is not None
+        return make_train_step(model, optimizer, rules, shape)
+    if shape.kind == "prefill":
+        return make_prefill_step(model, rules, shape)
+    return make_serve_step(model, rules, shape)
+
+
+def dummy_args(model: Model, shape: ShapeConfig, args: Dict[str, Any],
+               optimizer=None):
+    """ShapeDtypeStruct argument tuple for ``lower()`` (no allocation)."""
+    sds = args["batch"]
+    if shape.kind == "train":
+        return (args["params"], args["opt_state"], sds)
+    if shape.kind == "prefill":
+        base = (args["params"], sds["tokens"], sds["cache"])
+        if args.get("extra_key"):
+            base = base + (sds[args["extra_key"]],)
+        return base
+    return (args["params"], sds["token"], sds["cache"], sds["index"])

@@ -1,0 +1,4 @@
+from repro.models.execution import ExecConfig, DEFAULT_EXEC
+from repro.models.model import Model, build_model
+
+__all__ = ["ExecConfig", "DEFAULT_EXEC", "Model", "build_model"]

@@ -1,0 +1,167 @@
+"""GQA attention layer: init, full-sequence apply, prefill and decode modes.
+
+Dispatches to the flash-attention / decode-attention kernel packages.
+KV caches are (B, S_max, K, D) per layer; decode writes the new token's K/V at
+per-sequence positions via scatter (sequences in a serving batch have
+different lengths — the Faasm serving runtime batches unrelated requests).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.execution import ExecConfig
+from repro.models.layers import dt, rms_head_norm, rope_apply, trunc_normal
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.decode_attention import decode_attention
+
+
+def attn_init(key, cfg: ModelConfig):
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    pdt = dt(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    p = {
+        "wq": trunc_normal(ks[0], (d, qd), std, pdt),
+        "wk": trunc_normal(ks[1], (d, kvd), std, pdt),
+        "wv": trunc_normal(ks[2], (d, kvd), std, pdt),
+        "wo": trunc_normal(ks[3], (qd, d), qd ** -0.5, pdt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), pdt)
+        p["bk"] = jnp.zeros((kvd,), pdt)
+        p["bv"] = jnp.zeros((kvd,), pdt)
+    if cfg.o_bias:
+        p["bo"] = jnp.zeros((d,), pdt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), pdt)
+        p["k_norm"] = jnp.ones((cfg.head_dim,), pdt)
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, x, positions):
+    """x: (B, S, d) -> q (B,S,H,D), k/v (B,S,K,D) with rope + qk-norm applied."""
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_head_norm(p["k_norm"], k, cfg.norm_eps)
+    if cfg.use_rope and positions is not None:
+        q = rope_apply(q, positions, cfg.rope_theta)
+        k = rope_apply(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _out_proj(p, y, B, S, cfg):
+    out = y.reshape(B, S, cfg.q_dim) @ p["wo"]
+    if cfg.o_bias:
+        out = out + p["bo"]
+    return out
+
+
+def attn_apply_full(p, cfg: ModelConfig, ec: ExecConfig, x, *,
+                    positions=None, causal=True) -> jnp.ndarray:
+    """Full-sequence attention (training / encoder).  x: (B, S, d)."""
+    B, S, _ = x.shape
+    if positions is None and cfg.use_rope:
+        positions = jnp.arange(S)
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if not ec.flash_for_prefill:
+        y = attention_ref(q, k, v, causal=causal)
+    elif causal and ec.attn_buckets > 1 and S % ec.attn_buckets == 0:
+        # causal q-bucketing: queries in bucket i only ever see keys in
+        # [0, (i+1)·S/nb) — skip the strictly-upper KV blocks entirely.
+        # Work factor (nb+1)/(2·nb) of full-rectangle attention.
+        nb = ec.attn_buckets
+        bs = S // nb
+        parts = []
+        for i in range(nb):
+            parts.append(flash_attention(
+                q[:, i * bs:(i + 1) * bs], k[:, :(i + 1) * bs],
+                v[:, :(i + 1) * bs], causal=True, q_offset=i * bs,
+                backend=ec.backend, block_k=min(ec.attn_block_k, (i + 1) * bs)))
+        y = jnp.concatenate(parts, axis=1)
+    else:
+        y = flash_attention(q, k, v, causal=causal, backend=ec.backend,
+                            block_k=ec.attn_block_k)
+    return _out_proj(p, y, B, S, cfg)
+
+
+def attn_apply_prefill(p, cfg: ModelConfig, ec: ExecConfig, x, cache_k, cache_v,
+                       *, positions=None) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Prefill: causal attention + write K/V into the cache prefix.
+
+    cache_k/v: (B, S_max, K, D) zero-initialised.  Returns (out, k_cache, v_cache).
+    """
+    B, S, _ = x.shape
+    if positions is None and cfg.use_rope:
+        positions = jnp.arange(S)
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    y = flash_attention(q, k, v, causal=True, backend=ec.backend,
+                        block_k=ec.attn_block_k)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                           (0, 0, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                           (0, 0, 0, 0))
+    return _out_proj(p, y, B, S, cfg), cache_k, cache_v
+
+
+def attn_apply_decode(p, cfg: ModelConfig, ec: ExecConfig, x, cache_k, cache_v,
+                      index) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One decode step.  x: (B, 1, d); index: (B,) position of the new token.
+
+    Returns (out (B,1,d), new cache_k, new cache_v)."""
+    B = x.shape[0]
+    positions = index[:, None] if cfg.use_rope else None      # (B, 1)
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    batch_ix = jnp.arange(B)
+    cache_k = cache_k.at[batch_ix, index].set(k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[batch_ix, index].set(v[:, 0].astype(cache_v.dtype))
+    lengths = index + 1
+    y = decode_attention(q[:, 0], cache_k.astype(q.dtype),
+                         cache_v.astype(q.dtype), lengths,
+                         backend=ec.backend)
+    return _out_proj(p, y[:, None], B, 1, cfg), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (encoder/decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_init(key, cfg: ModelConfig):
+    return attn_init(key, cfg)
+
+
+def cross_attn_precompute(p, cfg: ModelConfig, enc_out):
+    """Compute K/V over encoder output once per request.  enc_out: (B, F, d)."""
+    B, F, _ = enc_out.shape
+    k = enc_out @ p["wk"]
+    v = enc_out @ p["wv"]
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(B, F, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, F, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def cross_attn_apply(p, cfg: ModelConfig, ec: ExecConfig, x, ck, cv):
+    """Decoder cross-attention (no masking).  x: (B, S, d); ck/cv: (B, F, K, D)."""
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    y = flash_attention(q, ck.astype(q.dtype), cv.astype(q.dtype), causal=False,
+                        backend=ec.backend, block_k=ec.attn_block_k)
+    return _out_proj(p, y, B, S, cfg)

@@ -1,0 +1,183 @@
+"""Encoder/decoder transformer backbone (Whisper-style).
+
+The audio conv frontend is a stub per the assignment: inputs are precomputed
+frame embeddings (B, n_frames, d_model).  Positions are fixed sinusoidal for
+both stacks (the released model uses learned decoder positions capped at 448;
+sinusoidal keeps the assigned 32k-decode shape well-defined — noted in
+DESIGN.md).  Decoder serve state: per-layer self-attention KV cache plus a
+per-request cross-attention KV cache computed once at prefill.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.execution import ExecConfig
+from repro.models import layers as L
+from repro.models.attention import (attn_apply_decode, attn_apply_full,
+                                    attn_apply_prefill, attn_init,
+                                    cross_attn_apply, cross_attn_precompute)
+from repro.kernels.decode_attention import decode_attention
+from repro.models.transformer import _maybe_remat, dense_block_init
+
+
+def dec_block_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    return {"ln1": L.norm_init(cfg), "self_attn": attn_init(ks[0], cfg),
+            "ln2": L.norm_init(cfg), "cross_attn": attn_init(ks[1], cfg),
+            "ln3": L.norm_init(cfg), "mlp": L.mlp_init(ks[2], cfg)}
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    params = L.embed_init(ks[0], cfg)
+    params["encoder"] = {
+        "layers": jax.vmap(lambda k: dense_block_init(k, cfg))(
+            jax.random.split(ks[1], cfg.n_enc_layers)),
+        "ln_post": L.norm_init(cfg),
+    }
+    params["layers"] = jax.vmap(lambda k: dec_block_init(k, cfg))(
+        jax.random.split(ks[2], cfg.n_layers))
+    params["final_norm"] = L.norm_init(cfg)
+    return params
+
+
+def encode(params, cfg: ModelConfig, ec: ExecConfig, frames, train=False):
+    """frames: (B, F, d) stubbed conv-frontend output."""
+    h = frames.astype(L.dt(cfg.dtype))
+    h = h + L.sinusoidal_positions(h.shape[1], cfg.d_model).astype(h.dtype)
+
+    def body(h, lp):
+        a = attn_apply_full(lp["attn"], cfg, ec, L.norm_apply(lp["ln1"], cfg, h),
+                            causal=False)
+        h = h + a
+        h = h + L.mlp_apply(lp["mlp"], cfg, L.norm_apply(lp["ln2"], cfg, h))
+        return h, None
+
+    if train:
+        body = _maybe_remat(body, ec)
+    h, _ = jax.lax.scan(body, h, params["encoder"]["layers"])
+    return L.norm_apply(params["encoder"]["ln_post"], cfg, h)
+
+
+def _dec_block_full(lp, cfg, ec, h, enc_out):
+    a = attn_apply_full(lp["self_attn"], cfg, ec,
+                        L.norm_apply(lp["ln1"], cfg, h), causal=True)
+    h = h + a
+    ck, cv = cross_attn_precompute(lp["cross_attn"], cfg, enc_out)
+    h = h + cross_attn_apply(lp["cross_attn"], cfg, ec,
+                             L.norm_apply(lp["ln2"], cfg, h), ck, cv)
+    h = h + L.mlp_apply(lp["mlp"], cfg, L.norm_apply(lp["ln3"], cfg, h))
+    return h
+
+
+def forward_hidden(params, cfg: ModelConfig, ec: ExecConfig, tokens,
+                   frames=None, train: bool = True):
+    enc_out = encode(params, cfg, ec, frames, train=train)
+    h = L.embed_apply(params, cfg, tokens)
+    h = h + L.sinusoidal_positions(h.shape[1], cfg.d_model).astype(h.dtype)
+
+    def body(h, lp):
+        if ec.shard_activations:
+            h = L.seq_shard_constraint(h)
+        return _dec_block_full(lp, cfg, ec, h, enc_out), None
+
+    if train:
+        body = _maybe_remat(body, ec)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    return L.norm_apply(params["final_norm"], cfg, h), jnp.zeros((), jnp.float32)
+
+
+def forward_train(params, cfg: ModelConfig, ec: ExecConfig, batch):
+    h, aux = forward_hidden(params, cfg, ec, batch["tokens"],
+                            batch.get("frames"), train=True)
+    loss = L.chunked_loss(params, cfg, h, batch["targets"], batch["mask"],
+                          ec.loss_chunk)
+    return loss + aux, {"loss": loss, "aux_loss": aux}
+
+
+def forward_logits(params, cfg: ModelConfig, ec: ExecConfig, tokens,
+                   frames=None):
+    h, _ = forward_hidden(params, cfg, ec, tokens, frames, train=False)
+    return L.logits_apply(params, cfg, h, f32=ec.logits_f32)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    Ln = cfg.n_layers
+    kv = lambda s: jnp.zeros((Ln, batch, s, cfg.n_kv_heads, cfg.head_dim),
+                             L.dt(cfg.dtype))
+    return {"k": kv(max_len), "v": kv(max_len),
+            "ck": kv(cfg.n_frames), "cv": kv(cfg.n_frames)}
+
+
+def prefill(params, cfg: ModelConfig, ec: ExecConfig, tokens, cache,
+            frames=None):
+    cache = dict(cache)
+    enc_out = encode(params, cfg, ec, frames)
+    h = L.embed_apply(params, cfg, tokens)
+    B, S = tokens.shape
+    h = h + L.sinusoidal_positions(S, cfg.d_model).astype(h.dtype)
+
+    def body(h, xs):
+        lp, sk, sv = xs
+        if ec.shard_activations:
+            h = L.seq_shard_constraint(h)
+        a, sk, sv = attn_apply_prefill(lp["self_attn"], cfg, ec,
+                                       L.norm_apply(lp["ln1"], cfg, h), sk, sv)
+        h = h + a
+        ck, cv = cross_attn_precompute(lp["cross_attn"], cfg, enc_out)
+        h = h + cross_attn_apply(lp["cross_attn"], cfg, ec,
+                                 L.norm_apply(lp["ln2"], cfg, h), ck, cv)
+        h = h + L.mlp_apply(lp["mlp"], cfg, L.norm_apply(lp["ln3"], cfg, h))
+        return h, (sk, sv, ck.astype(sk.dtype), cv.astype(sv.dtype))
+
+    h, (sk, sv, ck, cv) = jax.lax.scan(body, h,
+                                       (params["layers"], cache["k"], cache["v"]))
+    cache.update(k=sk, v=sv, ck=ck, cv=cv)
+    h = L.norm_apply(params["final_norm"], cfg, h)
+    logits = L.logits_apply(params, cfg, h[:, -1:], f32=ec.logits_f32)[:, 0]
+    return logits, cache, S
+
+
+def decode_step(params, cfg: ModelConfig, ec: ExecConfig, token, cache, index):
+    cache = dict(cache)
+    B = token.shape[0]
+    h = L.embed_apply(params, cfg, token[:, None])
+    # position embedding for the new token at per-sequence positions
+    max_len = cache["k"].shape[2]
+    pos_table = L.sinusoidal_positions(max_len, cfg.d_model)
+    h = h + pos_table[index][:, None].astype(h.dtype)
+    F = cfg.n_frames
+    flen = jnp.full((B,), F, jnp.int32)
+
+    def body(h, xs):
+        lp, sk, sv, ck, cv = xs
+        a, sk, sv = attn_apply_decode(lp["self_attn"], cfg, ec,
+                                      L.norm_apply(lp["ln1"], cfg, h), sk, sv,
+                                      index)
+        h = h + a
+        x = L.norm_apply(lp["ln2"], cfg, h)
+        q = (x @ lp["cross_attn"]["wq"])
+        if cfg.qkv_bias:
+            q = q + lp["cross_attn"]["bq"]
+        q = q.reshape(B, cfg.n_heads, cfg.head_dim)
+        y = decode_attention(q, ck.astype(q.dtype), cv.astype(q.dtype), flen,
+                             backend=ec.backend)
+        y = y.reshape(B, 1, cfg.q_dim) @ lp["cross_attn"]["wo"]
+        if cfg.o_bias:
+            y = y + lp["cross_attn"]["bo"]
+        h = h + y
+        h = h + L.mlp_apply(lp["mlp"], cfg, L.norm_apply(lp["ln3"], cfg, h))
+        return h, (sk, sv)
+
+    h, (sk, sv) = jax.lax.scan(body, h, (params["layers"], cache["k"],
+                                         cache["v"], cache["ck"], cache["cv"]))
+    cache.update(k=sk, v=sv)
+    h = L.norm_apply(params["final_norm"], cfg, h)
+    logits = L.logits_apply(params, cfg, h, f32=ec.logits_f32)[:, 0]
+    return logits, cache

@@ -1,0 +1,139 @@
+"""Mamba2 (SSD) block: fused in-projection, causal conv, SSD scan, gated norm.
+
+Full-sequence apply dispatches to ``kernels/ssd_scan`` (Pallas on TPU, chunked
+XLA elsewhere); the decode step is a pure-jnp O(H·P·N) state update.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.execution import ExecConfig
+from repro.models.layers import dt, trunc_normal
+from repro.kernels.ssd_scan import ssd, ssd_step
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.d_inner
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    H, P = cfg.ssm_nheads, cfg.ssm_headdim
+    conv_ch = d_in + 2 * G * N
+    proj = 2 * d_in + 2 * G * N + H          # [z, x, B, C, dt]
+    return d_in, G, N, H, P, conv_ch, proj
+
+
+def mamba_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in, G, N, H, P, conv_ch, proj = _dims(cfg)
+    pdt = dt(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    A = jax.random.uniform(ks[2], (H,), jnp.float32, 1.0, 16.0)
+    return {
+        "w_in": trunc_normal(ks[0], (d, proj), d ** -0.5, pdt),
+        "conv_w": trunc_normal(ks[1], (cfg.ssm_conv, conv_ch), 0.1, pdt),
+        "conv_b": jnp.zeros((conv_ch,), pdt),
+        "A_log": jnp.log(A),                                   # A = -exp(A_log)
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), pdt),
+        "w_out": trunc_normal(ks[3], (d_in, d), d_in ** -0.5, pdt),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    d_in, G, N, H, P, conv_ch, proj = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    conv_in = zxbcdt[..., d_in:d_in + conv_ch]
+    dt_raw = zxbcdt[..., d_in + conv_ch:]
+    return z, conv_in, dt_raw
+
+
+def _split_conv(cfg: ModelConfig, conv_out):
+    d_in, G, N, H, P, conv_ch, proj = _dims(cfg)
+    xc = conv_out[..., :d_in]
+    Bc = conv_out[..., d_in:d_in + G * N]
+    Cc = conv_out[..., d_in + G * N:]
+    return xc, Bc, Cc
+
+
+def _gated_norm(p, cfg: ModelConfig, y, z):
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    ms = (gf * gf).mean(-1, keepdims=True)
+    out = gf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["norm_scale"].astype(jnp.float32)
+    return out.astype(y.dtype)
+
+
+def _causal_conv_full(p, x):
+    """Depthwise causal conv.  x: (B, S, C) -> (B, S, C)."""
+    W = p["conv_w"].shape[0]
+    C = x.shape[-1]
+    kernel = p["conv_w"].astype(x.dtype)[:, None, :]           # (W, 1, C)
+    y = jax.lax.conv_general_dilated(
+        x, kernel, window_strides=(1,), padding=[(W - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=C)
+    return y + p["conv_b"].astype(x.dtype)
+
+
+def mamba_apply_full(p, cfg: ModelConfig, ec: ExecConfig, x, *,
+                     initial_state=None, return_state: bool = False):
+    """x: (B, S, d).  Returns y or (y, (conv_state, ssm_state))."""
+    B, S, d = x.shape
+    d_in, G, N, H, P, conv_ch, proj = _dims(cfg)
+    zxbcdt = x @ p["w_in"]
+    z, conv_in, dt_raw = _split_proj(cfg, zxbcdt)
+    conv_out = jax.nn.silu(_causal_conv_full(p, conv_in))
+    xc, Bc, Cc = _split_conv(cfg, conv_out)
+
+    x_h = xc.reshape(B, S, H, P)
+    Bg = Bc.reshape(B, S, G, N)
+    Cg = Cc.reshape(B, S, G, N)
+    dts = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y, final_state = ssd(x_h, dts, A, Bg, Cg, p["D"], chunk=cfg.ssm_chunk,
+                         initial_state=initial_state, backend=ec.backend)
+    y = y.reshape(B, S, d_in)
+    out = _gated_norm(p, cfg, y, z) @ p["w_out"]
+    if return_state:
+        W = cfg.ssm_conv
+        tail = conv_in[:, -(W - 1):, :] if S >= W - 1 else jnp.pad(
+            conv_in, ((0, 0), (W - 1 - S, 0), (0, 0)))
+        return out, (tail.astype(dt(cfg.dtype)), final_state)
+    return out
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int):
+    d_in, G, N, H, P, conv_ch, proj = _dims(cfg)
+    return (jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dt(cfg.dtype)),
+            jnp.zeros((batch, H, P, N), jnp.float32))
+
+
+def mamba_step(p, cfg: ModelConfig, state, x_t):
+    """One decode step.  x_t: (B, d); state = (conv_state, ssm_state)."""
+    conv_state, ssm_state = state
+    B, d = x_t.shape
+    d_in, G, N, H, P, conv_ch, proj = _dims(cfg)
+    zxbcdt = x_t @ p["w_in"]
+    z, conv_in_t, dt_raw = _split_proj(cfg, zxbcdt)
+
+    window = jnp.concatenate(
+        [conv_state, conv_in_t[:, None, :].astype(conv_state.dtype)], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32)).astype(x_t.dtype)
+    new_conv_state = window[:, 1:, :]
+
+    xc, Bc, Cc = _split_conv(cfg, conv_out)
+    x_h = xc.reshape(B, H, P)
+    Bg = Bc.reshape(B, G, N)
+    Cg = Cc.reshape(B, G, N)
+    dts = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, new_ssm = ssd_step(ssm_state, x_h, dts, A, Bg, Cg, p["D"])
+    y = y.reshape(B, d_in)
+    out = _gated_norm(p, cfg, y, z) @ p["w_out"]
+    return out, (new_conv_state, new_ssm)

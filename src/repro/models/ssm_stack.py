@@ -1,0 +1,207 @@
+"""Attention-free Mamba2 stack (mamba2-130m) and Zamba2-style hybrid.
+
+The hybrid applies a single *shared* transformer block (weights tied across
+all applications — the Zamba2 parameter-sharing trick) before every
+``attn_every`` Mamba2 layers.  Layers are organised as static **groups**
+(shared block + inner ``lax.scan`` over that group's stacked Mamba layers):
+no ``lax.cond`` in the hot path, so both the lowered program and the roofline
+accounting pay for attention exactly n_groups times.  Serving state:
+per-layer (conv_state, ssm_state); the hybrid adds one KV cache per shared-
+block application.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.execution import ExecConfig
+from repro.models import layers as L
+from repro.models.attention import (attn_apply_decode, attn_apply_full,
+                                    attn_apply_prefill, attn_init)
+from repro.models.ssm import (mamba_apply_full, mamba_init, mamba_init_state,
+                              mamba_step)
+from repro.models.transformer import (_maybe_remat, block_decode, block_full,
+                                      block_prefill, dense_block_init)
+
+
+def n_attn_apps(cfg: ModelConfig) -> int:
+    return math.ceil(cfg.n_layers / cfg.attn_every) if cfg.attn_every else 0
+
+
+def _groups(cfg: ModelConfig):
+    """Static (start, end) layer ranges, one group per shared-attn application."""
+    if not cfg.attn_every:
+        return [(0, cfg.n_layers)]
+    k = cfg.attn_every
+    return [(i, min(i + k, cfg.n_layers)) for i in range(0, cfg.n_layers, k)]
+
+
+def _slice_layers(layers, a: int, b: int):
+    return jax.tree.map(lambda x: x[a:b], layers)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    params = L.embed_init(ks[0], cfg)
+
+    def layer_init(k):
+        return {"ln": L.norm_init(cfg), "mamba": mamba_init(k, cfg)}
+
+    params["layers"] = jax.vmap(layer_init)(jax.random.split(ks[1], cfg.n_layers))
+    if cfg.family == "hybrid":
+        params["shared_block"] = dense_block_init(ks[2], cfg)
+    params["final_norm"] = L.norm_init(cfg)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill base)
+# ---------------------------------------------------------------------------
+
+def _mamba_block_full(lp, cfg, ec, h, return_state=False):
+    x = L.norm_apply(lp["ln"], cfg, h)
+    if return_state:
+        y, state = mamba_apply_full(lp["mamba"], cfg, ec, x, return_state=True)
+        return h + y, state
+    return h + mamba_apply_full(lp["mamba"], cfg, ec, x)
+
+
+def forward_hidden(params, cfg: ModelConfig, ec: ExecConfig, tokens,
+                   image_embeds=None, train: bool = True):
+    h = L.embed_apply(params, cfg, tokens)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    shared = params.get("shared_block")
+
+    def body(carry, lp):
+        h, = carry
+        if ec.shard_activations:
+            h = L.seq_shard_constraint(h, wide=True)
+        h = _mamba_block_full(lp, cfg, ec, h)
+        return (h,), None
+
+    if train:
+        body = _maybe_remat(body, ec)
+    for (a, b) in _groups(cfg):
+        if shared is not None:
+            if ec.shard_activations:
+                h = L.seq_shard_constraint(h, wide=True)
+            hb = functools.partial(block_full, shared, cfg, ec,
+                                   positions=positions)
+            if train:
+                h = _maybe_remat(lambda hh: hb(hh)[0], ec)(h)
+            else:
+                h = hb(h)[0]
+        (h,), _ = jax.lax.scan(body, (h,), _slice_layers(params["layers"], a, b))
+    return L.norm_apply(params["final_norm"], cfg, h), jnp.zeros((), jnp.float32)
+
+
+def forward_train(params, cfg: ModelConfig, ec: ExecConfig, batch):
+    h, aux = forward_hidden(params, cfg, ec, batch["tokens"], train=True)
+    loss = L.chunked_loss(params, cfg, h, batch["targets"], batch["mask"],
+                          ec.loss_chunk)
+    return loss + aux, {"loss": loss, "aux_loss": aux}
+
+
+def forward_logits(params, cfg: ModelConfig, ec: ExecConfig, tokens,
+                   image_embeds=None):
+    h, _ = forward_hidden(params, cfg, ec, tokens, train=False)
+    return L.logits_apply(params, cfg, h, f32=ec.logits_f32)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    conv0, ssm0 = mamba_init_state(cfg, batch)
+    Ln = cfg.n_layers
+    cache = {
+        "conv": jnp.broadcast_to(conv0, (Ln,) + conv0.shape).copy(),
+        "ssm": jnp.broadcast_to(ssm0, (Ln,) + ssm0.shape).copy(),
+    }
+    if cfg.family == "hybrid":
+        A = n_attn_apps(cfg)
+        kv = lambda: jnp.zeros(
+            (A, batch, max_len, cfg.n_kv_heads, cfg.head_dim), L.dt(cfg.dtype))
+        cache["k"] = kv()
+        cache["v"] = kv()
+    return cache
+
+
+def prefill(params, cfg: ModelConfig, ec: ExecConfig, tokens, cache,
+            image_embeds=None):
+    cache = dict(cache)
+    h = L.embed_apply(params, cfg, tokens)
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+    shared = params.get("shared_block")
+
+    def body(h, lp):
+        if ec.shard_activations:
+            h = L.seq_shard_constraint(h, wide=True)
+        h, state = _mamba_block_full(lp, cfg, ec, h, return_state=True)
+        return h, state
+
+    convs, ssms, new_k, new_v = [], [], [], []
+    for g, (a, b) in enumerate(_groups(cfg)):
+        if shared is not None:
+            h, ck, cv = block_prefill(shared, cfg, ec, h, cache["k"][g],
+                                      cache["v"][g], positions)
+            new_k.append(ck)
+            new_v.append(cv)
+        h, (conv_g, ssm_g) = jax.lax.scan(
+            body, h, _slice_layers(params["layers"], a, b))
+        convs.append(conv_g)
+        ssms.append(ssm_g)
+    cache["conv"] = jnp.concatenate(convs, axis=0)
+    cache["ssm"] = jnp.concatenate(ssms, axis=0)
+    if shared is not None:
+        cache["k"] = jnp.stack(new_k, axis=0)
+        cache["v"] = jnp.stack(new_v, axis=0)
+    h = L.norm_apply(params["final_norm"], cfg, h)
+    logits = L.logits_apply(params, cfg, h[:, -1:], f32=ec.logits_f32)[:, 0]
+    return logits, cache, S
+
+
+def decode_step(params, cfg: ModelConfig, ec: ExecConfig, token, cache, index):
+    cache = dict(cache)
+    h = L.embed_apply(params, cfg, token[:, None])
+    shared = params.get("shared_block")
+
+    def body(h, xs):
+        lp, conv, ssm = xs
+        x = L.norm_apply(lp["ln"], cfg, h[:, 0])
+        y, (conv, ssm) = mamba_step(lp["mamba"], cfg, (conv, ssm), x)
+        h = h + y[:, None]
+        return h, (conv, ssm)
+
+    convs, ssms, new_k, new_v = [], [], [], []
+    for g, (a, b) in enumerate(_groups(cfg)):
+        if shared is not None:
+            h, ck, cv = block_decode(shared, cfg, ec, h, cache["k"][g],
+                                     cache["v"][g], index)
+            new_k.append(ck)
+            new_v.append(cv)
+        h, (conv_g, ssm_g) = jax.lax.scan(
+            body, h, (_slice_layers(params["layers"], a, b),
+                      cache["conv"][a:b], cache["ssm"][a:b]))
+        convs.append(conv_g)
+        ssms.append(ssm_g)
+    cache["conv"] = jnp.concatenate(convs, axis=0)
+    cache["ssm"] = jnp.concatenate(ssms, axis=0)
+    if shared is not None:
+        cache["k"] = jnp.stack(new_k, axis=0)
+        cache["v"] = jnp.stack(new_v, axis=0)
+    h = L.norm_apply(params["final_norm"], cfg, h)
+    logits = L.logits_apply(params, cfg, h, f32=ec.logits_f32)[:, 0]
+    return logits, cache

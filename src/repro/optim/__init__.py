@@ -1,0 +1,6 @@
+from repro.optim.sgd import SGD, AdamW, SGDState, AdamWState, warmup_cosine
+from repro.optim.grad_accum import accumulate_grads
+from repro.optim import compression
+
+__all__ = ["SGD", "AdamW", "SGDState", "AdamWState", "warmup_cosine",
+           "accumulate_grads", "compression"]

@@ -1,0 +1,86 @@
+"""Gradient/push compression for the cross-pod global-tier synchronisation.
+
+Faasm pushes deltas from the local to the global tier; at pod scale the
+analogous transfer is the cross-pod gradient/update all-reduce.  Two
+compressors, both with **error feedback** (the residual of the lossy step is
+carried into the next push so compression error doesn't accumulate as bias):
+
+  * int8 per-tensor-row quantisation (the wire format of
+    ``kernels/state_push``) — 4× fewer ICI bytes than f32, ~2× vs bf16;
+  * top-k sparsification — send only the k largest-magnitude entries.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    residual: Any                      # error-feedback pytree
+
+
+def init_state(params_like) -> CompressionState:
+    return CompressionState(residual=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params_like))
+
+
+# -- int8 -----------------------------------------------------------------------
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row (last-axis) int8 quantisation: (q, scales)."""
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    scale = jnp.maximum(jnp.abs(x2).max(axis=1, keepdims=True) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x2 / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(x.shape), scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    q2 = q.reshape(-1, q.shape[-1]).astype(jnp.float32) * scale
+    return q2.reshape(q.shape)
+
+
+def compress_int8(grads, state: CompressionState):
+    """Returns (wire pytree of (q, scale), decoded pytree, new state)."""
+
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = quantize_int8(x)
+        dec = dequantize_int8(q, s)
+        return (q, s), dec, x - dec
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(state.residual)
+    wire, dec, res = zip(*[one(g, r) for g, r in zip(flat_g, flat_r)])
+    return (jax.tree.unflatten(tree, wire),
+            jax.tree.unflatten(tree, dec),
+            CompressionState(residual=jax.tree.unflatten(tree, res)))
+
+
+# -- top-k ------------------------------------------------------------------------
+
+def compress_topk(grads, state: CompressionState, frac: float = 0.01):
+    """Keep the top ``frac`` of entries per tensor (by magnitude)."""
+
+    def one(g, r):
+        x = (g.astype(jnp.float32) + r).reshape(-1)
+        k = max(1, int(x.size * frac))
+        _, idx = jax.lax.top_k(jnp.abs(x), k)
+        vals = x[idx]
+        dec = jnp.zeros_like(x).at[idx].set(vals)
+        return (idx, vals), dec.reshape(g.shape), (x - dec).reshape(g.shape)
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(state.residual)
+    wire, dec, res = zip(*[one(g, r) for g, r in zip(flat_g, flat_r)])
+    return (jax.tree.unflatten(tree, wire),
+            jax.tree.unflatten(tree, dec),
+            CompressionState(residual=jax.tree.unflatten(tree, res)))
+
+
+def wire_bytes_int8(wire) -> int:
+    total = 0
+    for q, s in jax.tree.leaves(wire, is_leaf=lambda x: isinstance(x, tuple)):
+        total += q.size + s.size * 4
+    return total

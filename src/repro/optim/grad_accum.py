@@ -1,0 +1,44 @@
+"""Gradient accumulation (microbatching) as a scan over the loss function.
+
+Slices the per-step batch into ``n`` microbatches along the batch axis and
+accumulates mean gradients — bounds activation memory for the big train cells
+(the microbatch count is an ExecConfig hillclimb lever).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def accumulate_grads(loss_fn: Callable, params, batch: Dict[str, Any],
+                     n_micro: int, accum_dtype=jnp.float32):
+    """loss_fn(params, batch) -> (loss, metrics).  Returns (grads, loss, metrics).
+
+    ``accum_dtype=jnp.bfloat16`` halves accumulator memory — the lever that
+    lets the 1T-param config fit (paper-style SGD tolerates the precision)."""
+    if n_micro <= 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return grads, loss, metrics
+
+    def slice_micro(x, i):
+        B = x.shape[0]
+        mb = B // n_micro
+        return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+    def body(carry, i):
+        acc, loss_acc = carry
+        micro = jax.tree.map(lambda x: slice_micro(x, i), batch)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, micro)
+        acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype), acc, grads)
+        return (acc, loss_acc + loss), metrics
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+    (acc, loss_sum), metrics = jax.lax.scan(
+        body, (zeros, jnp.zeros(())), jnp.arange(n_micro))
+    grads = jax.tree.map(lambda a: a / n_micro, acc)
+    metrics = jax.tree.map(lambda m: m[-1], metrics)
+    return grads, loss_sum / n_micro, metrics

@@ -1,0 +1,113 @@
+"""Optimizers as pure pytree transforms (pjit-friendly).
+
+SGD is the paper's training optimizer (HOGWILD! SGD, §6.2); AdamW is provided
+for completeness.  Both keep their state as a pytree sharded like the params
+(ZeRO-style under the FSDP rules in ``distributed/sharding.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    momentum: Any                      # pytree or None-like empty tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray] = 1e-2
+    momentum: float = 0.0
+    weight_decay: float = 0.0
+
+    def init(self, params) -> SGDState:
+        mom = (jax.tree.map(jnp.zeros_like, params)
+               if self.momentum else ())
+        return SGDState(step=jnp.zeros((), jnp.int32), momentum=mom)
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def update(self, grads, state: SGDState, params) -> Tuple[Any, SGDState]:
+        lr = self._lr(state.step)
+
+        if self.momentum:
+            new_mom = jax.tree.map(
+                lambda m, g: self.momentum * m + g.astype(m.dtype),
+                state.momentum, grads)
+            upd = new_mom
+        else:
+            new_mom = ()
+            upd = grads
+
+        def apply(p, g):
+            gp = g.astype(jnp.float32)
+            if self.weight_decay:
+                gp = gp + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * gp).astype(p.dtype)
+
+        new_params = jax.tree.map(apply, params, upd)
+        return new_params, SGDState(step=state.step + 1, momentum=new_mom)
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def init(self, params) -> AdamWState:
+        zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(zeros32, params),
+                          nu=jax.tree.map(zeros32, params))
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        lr = self._lr(state.step)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+
+        def apply(p, m, v):
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            upd = upd + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        new_params = jax.tree.map(apply, params, mu, nu)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu)
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    """LR schedule usable as the ``lr`` field of either optimizer."""
+
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * (step + 1) / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return sched

@@ -1,0 +1,8 @@
+from repro.state.kv import GlobalTier, RWLock, DEFAULT_CHUNK
+from repro.state.local import LocalTier, Replica
+from repro.state.ddo import (Counter, DistDict, MatrixReadOnly,
+                             SparseMatrixReadOnly, VectorAsync)
+
+__all__ = ["GlobalTier", "RWLock", "DEFAULT_CHUNK", "LocalTier", "Replica",
+           "Counter", "DistDict", "MatrixReadOnly", "SparseMatrixReadOnly",
+           "VectorAsync"]

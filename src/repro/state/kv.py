@@ -1,0 +1,155 @@
+"""Global state tier: a chunked, thread-safe distributed key-value store.
+
+The authoritative copy of every state value (Faasm §4.2).  Values are byte
+arrays (the paper's language-agnostic representation); large values are split
+into fixed-size **state chunks** that can be pulled/pushed independently, so a
+Faaslet replicates only the subsets it touches (Fig. 4, value C).
+
+The store tracks per-host transfer bytes — the experiments' "network
+transfer" metric (Fig. 6b) reads from here.  Global read/write locks per key
+implement ``lock_state_global_read/write``.
+"""
+from __future__ import annotations
+
+import threading
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+DEFAULT_CHUNK = 1 << 20          # 1 MiB state chunks
+
+
+class RWLock:
+    """Writer-preferring readers/writer lock."""
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._readers = 0
+        self._writer = False
+        self._writers_waiting = 0
+
+    def acquire_read(self):
+        with self._cond:
+            while self._writer or self._writers_waiting:
+                self._cond.wait()
+            self._readers += 1
+
+    def release_read(self):
+        with self._cond:
+            self._readers -= 1
+            if self._readers == 0:
+                self._cond.notify_all()
+
+    def acquire_write(self):
+        with self._cond:
+            self._writers_waiting += 1
+            while self._writer or self._readers:
+                self._cond.wait()
+            self._writers_waiting -= 1
+            self._writer = True
+
+    def release_write(self):
+        with self._cond:
+            self._writer = False
+            self._cond.notify_all()
+
+
+class GlobalTier:
+    """In-memory stand-in for the distributed KVS backing the global tier.
+
+    On a real deployment this is Redis/Anna sharded across hosts; here one
+    process hosts the authoritative map, with the same chunk/locking/byte
+    semantics, so every state-protocol decision (what is pulled, when, how
+    many bytes) is real and measurable.
+    """
+
+    def __init__(self, chunk_size: int = DEFAULT_CHUNK):
+        self.chunk_size = chunk_size
+        self._store: Dict[str, bytearray] = {}
+        self._locks: Dict[str, RWLock] = defaultdict(RWLock)
+        self._mutex = threading.RLock()
+        self.bytes_pulled: Dict[str, int] = defaultdict(int)    # per host
+        self.bytes_pushed: Dict[str, int] = defaultdict(int)
+
+    # -- basic KV -----------------------------------------------------------
+
+    def exists(self, key: str) -> bool:
+        with self._mutex:
+            return key in self._store
+
+    def keys(self) -> List[str]:
+        with self._mutex:
+            return list(self._store.keys())
+
+    def size(self, key: str) -> int:
+        with self._mutex:
+            return len(self._store.get(key, b""))
+
+    def delete(self, key: str) -> None:
+        with self._mutex:
+            self._store.pop(key, None)
+
+    def get(self, key: str, *, host: str = "?") -> bytes:
+        with self._mutex:
+            val = bytes(self._store[key])
+        self.bytes_pulled[host] += len(val)
+        return val
+
+    def set(self, key: str, value: bytes, *, host: str = "?") -> None:
+        with self._mutex:
+            self._store[key] = bytearray(value)
+        self.bytes_pushed[host] += len(value)
+
+    def append(self, key: str, value: bytes, *, host: str = "?") -> None:
+        with self._mutex:
+            self._store.setdefault(key, bytearray()).extend(value)
+        self.bytes_pushed[host] += len(value)
+
+    # -- chunked access ------------------------------------------------------
+
+    def get_range(self, key: str, offset: int, length: int, *,
+                  host: str = "?") -> bytes:
+        with self._mutex:
+            buf = self._store[key]
+            if offset < 0 or offset + length > len(buf):
+                raise IndexError(
+                    f"state range [{offset}, {offset + length}) out of bounds "
+                    f"for {key!r} of size {len(buf)}")
+            val = bytes(buf[offset:offset + length])
+        self.bytes_pulled[host] += length
+        return val
+
+    def set_range(self, key: str, offset: int, value: bytes, *,
+                  host: str = "?") -> None:
+        with self._mutex:
+            buf = self._store.setdefault(key, bytearray())
+            end = offset + len(value)
+            if offset < 0:
+                raise IndexError("negative state offset")
+            if end > len(buf):
+                buf.extend(b"\x00" * (end - len(buf)))
+            buf[offset:end] = value
+        self.bytes_pushed[host] += len(value)
+
+    def n_chunks(self, key: str) -> int:
+        sz = self.size(key)
+        return max(1, -(-sz // self.chunk_size))
+
+    def chunk_bounds(self, key: str, idx: int) -> Tuple[int, int]:
+        sz = self.size(key)
+        start = idx * self.chunk_size
+        return start, min(self.chunk_size, sz - start)
+
+    # -- global locks -------------------------------------------------------
+
+    def lock(self, key: str) -> RWLock:
+        with self._mutex:
+            return self._locks[key]
+
+    # -- metrics --------------------------------------------------------------
+
+    def total_transfer(self) -> int:
+        return sum(self.bytes_pulled.values()) + sum(self.bytes_pushed.values())
+
+    def reset_metrics(self) -> None:
+        self.bytes_pulled.clear()
+        self.bytes_pushed.clear()

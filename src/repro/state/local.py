@@ -1,0 +1,197 @@
+"""Local state tier: zero-copy shared replicas on one host (Faasm §4.2).
+
+Replicas live in *shared memory regions* (§3.3): one numpy buffer per state
+value, and every Faaslet on the host maps a **view** of the same buffer into
+its address space — reads and writes are genuinely shared, no serialisation.
+Chunk presence is tracked so a pull only transfers missing chunks.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Set
+
+import numpy as np
+
+from repro.state.kv import GlobalTier, RWLock
+
+
+@dataclass
+class Replica:
+    buf: np.ndarray                      # uint8, the shared region backing
+    lock: RWLock = field(default_factory=RWLock)
+    present_chunks: Set[int] = field(default_factory=set)
+    dirty_chunks: Set[int] = field(default_factory=set)
+    full: bool = False                   # whole value present
+    base: Optional[np.ndarray] = None    # snapshot for delta-accumulating push
+
+
+class LocalTier:
+    """Per-host replica store.  All Faaslets of the host share these buffers."""
+
+    def __init__(self, host_id: str, global_tier: GlobalTier):
+        self.host_id = host_id
+        self.global_tier = global_tier
+        self._replicas: Dict[str, Replica] = {}
+        self._mutex = threading.RLock()
+
+    # -- replica lifecycle ------------------------------------------------------
+
+    def replica(self, key: str, size: Optional[int] = None) -> Replica:
+        """Get or create the shared replica buffer for ``key`` (no transfer)."""
+        with self._mutex:
+            r = self._replicas.get(key)
+            if r is None:
+                if size is None:
+                    size = self.global_tier.size(key)
+                r = Replica(buf=np.zeros(size, np.uint8))
+                self._replicas[key] = r
+            elif size is not None and size > r.buf.size:
+                grown = np.zeros(size, np.uint8)
+                grown[:r.buf.size] = r.buf
+                r.buf = grown
+            return r
+
+    def has(self, key: str) -> bool:
+        with self._mutex:
+            return key in self._replicas
+
+    def drop(self, key: Optional[str] = None) -> None:
+        """Evict replicas (host failure / memory pressure)."""
+        with self._mutex:
+            if key is None:
+                self._replicas.clear()
+            else:
+                self._replicas.pop(key, None)
+
+    def memory_bytes(self) -> int:
+        with self._mutex:
+            return sum(r.buf.size for r in self._replicas.values())
+
+    def keys(self):
+        with self._mutex:
+            return list(self._replicas.keys())
+
+    # -- pull / push (tier synchronisation) ----------------------------------------
+
+    def pull(self, key: str) -> Replica:
+        """Ensure the full value is replicated locally."""
+        size = self.global_tier.size(key)
+        r = self.replica(key, size)
+        r.lock.acquire_write()
+        try:
+            if not r.full:
+                data = self.global_tier.get(key, host=self.host_id)
+                r.buf[:len(data)] = np.frombuffer(data, np.uint8)
+                r.full = True
+                r.present_chunks = set(range(self.global_tier.n_chunks(key)))
+        finally:
+            r.lock.release_write()
+        return r
+
+    def pull_chunk(self, key: str, chunk_idx: int) -> Replica:
+        """Replicate a single state chunk (Fig. 4: partial values)."""
+        size = self.global_tier.size(key)
+        r = self.replica(key, size)
+        r.lock.acquire_write()
+        try:
+            if chunk_idx not in r.present_chunks:
+                start, length = self.global_tier.chunk_bounds(key, chunk_idx)
+                data = self.global_tier.get_range(key, start, length,
+                                                  host=self.host_id)
+                r.buf[start:start + len(data)] = np.frombuffer(data, np.uint8)
+                r.present_chunks.add(chunk_idx)
+                if len(r.present_chunks) == self.global_tier.n_chunks(key):
+                    r.full = True
+        finally:
+            r.lock.release_write()
+        return r
+
+    def pull_range(self, key: str, offset: int, length: int) -> Replica:
+        """Pull exactly the chunks covering [offset, offset+length)."""
+        cs = self.global_tier.chunk_size
+        for idx in range(offset // cs, (offset + max(length, 1) - 1) // cs + 1):
+            self.pull_chunk(key, idx)
+        return self._replicas[key]
+
+    def push(self, key: str) -> int:
+        """Write the full local replica to the global tier.  Returns bytes."""
+        with self._mutex:
+            r = self._replicas[key]
+        r.lock.acquire_read()
+        try:
+            data = r.buf.tobytes()
+        finally:
+            r.lock.release_read()
+        self.global_tier.set(key, data, host=self.host_id)
+        r.dirty_chunks.clear()
+        return len(data)
+
+    def push_dirty(self, key: str) -> int:
+        """Push only chunks marked dirty (partial push).  Returns bytes."""
+        with self._mutex:
+            r = self._replicas[key]
+        moved = 0
+        r.lock.acquire_read()
+        try:
+            dirty = sorted(r.dirty_chunks)
+            cs = self.global_tier.chunk_size
+            for idx in dirty:
+                start = idx * cs
+                end = min(start + cs, r.buf.size)
+                self.global_tier.set_range(key, start,
+                                           r.buf[start:end].tobytes(),
+                                           host=self.host_id)
+                moved += end - start
+        finally:
+            r.lock.release_read()
+        r.dirty_chunks.clear()
+        return moved
+
+    def snapshot_base(self, key: str) -> None:
+        """Record the replica contents as the base for a future delta push."""
+        r = self._replicas[key]
+        r.lock.acquire_read()
+        try:
+            r.base = r.buf.copy()
+        finally:
+            r.lock.release_read()
+
+    def push_delta(self, key: str, dtype=np.float32) -> int:
+        """Accumulating push: global += (local − base), then refresh base.
+
+        The cross-host-safe HOGWILD push (the fused ``kernels/state_push``
+        path on device): concurrent pushes from different hosts compose
+        instead of overwriting.  Runs under the key's global write lock.
+        Returns bytes moved."""
+        r = self._replicas[key]
+        gt = self.global_tier
+        lock = gt.lock(key)
+        lock.acquire_write()
+        try:
+            r.lock.acquire_read()
+            try:
+                local = r.buf.view(dtype).copy()
+                base = (r.base.view(dtype) if r.base is not None
+                        else np.zeros_like(local))
+                delta = local - base
+            finally:
+                r.lock.release_read()
+            cur = np.frombuffer(gt.get(key, host=self.host_id), dtype).copy()
+            cur[:delta.size] += delta[:cur.size]
+            gt.set(key, cur.tobytes(), host=self.host_id)
+            r.lock.acquire_write()
+            try:
+                r.base = r.buf.copy()
+            finally:
+                r.lock.release_write()
+            r.dirty_chunks.clear()
+            return delta.nbytes
+        finally:
+            lock.release_write()
+
+    def mark_dirty(self, key: str, offset: int, length: int) -> None:
+        r = self._replicas[key]
+        cs = self.global_tier.chunk_size
+        for idx in range(offset // cs, (offset + max(length, 1) - 1) // cs + 1):
+            r.dirty_chunks.add(idx)

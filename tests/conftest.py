@@ -1,0 +1,19 @@
+"""Shared test fixtures.
+
+NOTE: no XLA_FLAGS device-count forcing here — smoke tests and benchmarks
+must see the real single CPU device.  The multi-device mini dry-run test runs
+in a subprocess with its own XLA_FLAGS (see test_dryrun_mini.py).
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def jax_():
+    import jax
+    return jax

@@ -1,0 +1,70 @@
+"""Mini dry-run: lower+compile on an 8-placeholder-device mesh in a subprocess
+(the main test process must keep seeing 1 CPU device)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = textwrap.dedent("""\
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, sys
+    import jax
+    from repro.configs import smoke_config, ShapeConfig
+    from repro.models import build_model, ExecConfig
+    from repro.distributed.sharding import ShardingRules
+    from repro.distributed.hlo_analysis import analyze
+    from repro.launch.mesh import make_mesh
+    from repro.launch.steps import make_step_for_shape, dummy_args
+    from repro.optim import SGD
+
+    arch, kind = sys.argv[1], sys.argv[2]
+    multi = sys.argv[3] == "multi"
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model")) if multi \\
+        else make_mesh((2, 4), ("data", "model"))
+    cfg = smoke_config(arch)
+    model = build_model(cfg, ExecConfig(backend="xla", loss_chunk=16))
+    rules = ShardingRules(mesh, cfg)
+    shape = ShapeConfig("mini_" + kind, kind, 32, 4)
+    opt = SGD(lr=0.1)
+    with mesh:
+        jitted, args = make_step_for_shape(model, rules, shape, optimizer=opt)
+        lowered = jitted.lower(*dummy_args(model, shape, args, opt))
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        costs = analyze(compiled.as_text())
+    print(json.dumps({
+        "ok": True, "temp_bytes": mem.temp_size_in_bytes,
+        "flops": costs.flops, "collective_bytes": costs.collective_bytes,
+    }))
+""")
+
+
+def _run(arch, kind, mesh="single"):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", SCRIPT, arch, kind, mesh],
+                         capture_output=True, text=True, timeout=540, env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.parametrize("arch,kind", [
+    ("qwen1.5-0.5b", "train"),
+    ("deepseek-moe-16b", "train"),
+    ("mamba2-130m", "decode"),
+    ("zamba2-1.2b", "prefill"),
+])
+def test_mini_dryrun_single_mesh(arch, kind):
+    rec = _run(arch, kind, "single")
+    assert rec["ok"] and rec["flops"] > 0
+
+
+def test_mini_dryrun_multi_pod():
+    rec = _run("qwen1.5-0.5b", "train", "multi")
+    assert rec["ok"]
+    assert rec["collective_bytes"] > 0        # pod-axis gradient reduction

@@ -1,0 +1,74 @@
+"""Unit tests for the HLO static analyzer (FLOPs/bytes/collectives)."""
+import textwrap
+
+import pytest
+
+from repro.distributed.hlo_analysis import HloAnalyzer, analyze
+
+SAMPLE = textwrap.dedent("""\
+    HloModule jit_f, is_scheduled=true
+
+    %body.1 (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p = (s32[], f32[8,16]) parameter(0)
+      %iv = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,16] get-tuple-element(%p), index=1
+      %w = f32[16,16] constant({...})
+      %dot.1 = f32[8,16] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,16] all-reduce(%dot.1), replica_groups={}, to_apply=%add.1
+      %one = s32[] constant(1)
+      %niv = s32[] add(%iv, %one)
+      ROOT %t = (s32[], f32[8,16]) tuple(%niv, %ar)
+    }
+
+    %cond.1 (p2: (s32[], f32[8,16])) -> pred[] {
+      %p2 = (s32[], f32[8,16]) parameter(0)
+      %iv2 = s32[] get-tuple-element(%p2), index=0
+      %lim = s32[] constant(5)
+      ROOT %cmp = pred[] compare(%iv2, %lim), direction=LT
+    }
+
+    ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+      %a = f32[8,16] parameter(0)
+      %zero = s32[] constant(0)
+      %t0 = (s32[], f32[8,16]) tuple(%zero, %a)
+      %w.243 = (s32[], f32[8,16]) while(%t0), condition=%cond.1, body=%body.1
+      %ag = f32[16,16] all-gather(%a), replica_groups={}, dimensions={0}
+      ROOT %out = f32[8,16] get-tuple-element(%w.243), index=1
+    }
+""")
+
+
+def test_dot_flops_and_trip_count():
+    c = analyze(SAMPLE)
+    # dot: 2 * 8*16 (out) * 16 (contract) = 4096 flops, x5 loop trips
+    assert c.flops == 4096 * 5
+    # all-reduce operand = 8*16*4 bytes, x5; all-gather operand = 8*16*4 once
+    assert c.collective["all-reduce"] == 512 * 5
+    assert c.collective["all-gather"] == 512
+    assert c.collective_counts["all-reduce"] == 5
+
+
+def test_known_trip_count_config_preferred():
+    sample = SAMPLE.replace(
+        "condition=%cond.1, body=%body.1",
+        'condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"7"}}')
+    c = analyze(sample)
+    assert c.flops == 4096 * 7
+
+
+def test_real_module_parses():
+    import os
+    path = "/tmp/hlo_sample.txt"
+    if not os.path.exists(path):
+        pytest.skip("sample HLO not present")
+    c = analyze(open(path).read())
+    assert c.flops > 0 and c.bytes > 0
+    assert c.collective_bytes > 0
+
+
+def test_bytes_skip_control_ops():
+    a = HloAnalyzer(SAMPLE)
+    c = a.entry_costs()
+    # entry bytes: only the all-gather instruction counts in ENTRY
+    # (parameter/tuple/gte/while are control ops)
+    assert c.bytes >= 512 + 1024      # ag operand + result at minimum

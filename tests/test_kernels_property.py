@@ -1,0 +1,65 @@
+"""Hypothesis property tests on kernel invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention, attention_ref
+from repro.kernels.state_push import apply_delta, quantize_delta
+from repro.kernels.moe_gmm import gmm, gmm_ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    B=st.integers(1, 2),
+    Sq=st.integers(1, 12),
+    Sk=st.integers(1, 12),
+    G=st.integers(1, 3),
+    K=st.integers(1, 2),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_any_shape_matches_ref(B, Sq, Sk, G, K, causal, seed):
+    rng = np.random.default_rng(seed)
+    D = 8
+    H = K * G
+    q = jnp.asarray(rng.normal(size=(B, Sq, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Sk, K, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Sk, K, D)), jnp.float32)
+    off = max(0, Sk - Sq) if causal else 0
+    ref = attention_ref(q, k, v, causal=causal, q_offset=off)
+    got = flash_attention(q, k, v, causal=causal, q_offset=off,
+                          backend="xla", block_k=4)
+    np.testing.assert_allclose(ref, got, atol=3e-5, rtol=3e-5)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 500), seed=st.integers(0, 2**16),
+       scale=st.floats(1e-3, 1e3))
+def test_push_delta_bounded_error(n, seed, scale):
+    """|dequant(quant(delta)) - delta| <= absmax/127 per 128-lane row."""
+    rng = np.random.default_rng(seed)
+    local = jnp.asarray(rng.normal(size=(n,)) * scale, jnp.float32)
+    base = jnp.asarray(rng.normal(size=(n,)) * scale, jnp.float32)
+    gv = jnp.zeros((n,), jnp.float32)
+    q, s, _ = quantize_delta(local, base, backend="xla")
+    got = apply_delta(gv, q, s, backend="xla")
+    delta = np.asarray(local - base)
+    err = np.abs(np.asarray(got) - delta)
+    bound = np.abs(delta).max() / 127.0 * 1.01 + 1e-9
+    assert err.max() <= bound
+
+
+@settings(**SETTINGS)
+@given(T=st.integers(1, 40), E=st.integers(1, 6), seed=st.integers(0, 2**16))
+def test_gmm_any_grouping(T, E, seed):
+    rng = np.random.default_rng(seed)
+    d, f = 8, 8
+    x = jnp.asarray(rng.normal(size=(T, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(E, d, f)), jnp.float32)
+    cuts = np.sort(rng.integers(0, T + 1, size=E - 1)) if E > 1 else np.array([], int)
+    gs = jnp.asarray(np.diff(np.concatenate([[0], cuts, [T]])), jnp.int32)
+    ref = gmm_ref(x, w, gs)
+    got = gmm(x, w, gs, backend="xla")
+    np.testing.assert_allclose(ref, got, atol=1e-4, rtol=1e-4)

@@ -1,0 +1,131 @@
+"""ShardingRules unit tests: spec validity, divisibility guards, coverage."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_shape, smoke_config
+from repro.models import build_model, ExecConfig
+
+
+class FakeMesh:
+    """Axis-name/shape stand-in (rules only read names + sizes)."""
+
+    def __init__(self, shape_map):
+        self.axis_names = tuple(shape_map)
+        self.shape = dict(shape_map)
+        self.size = int(np.prod(list(shape_map.values())))
+
+
+def _rules(cfg, shape_map=None):
+    from repro.distributed.sharding import ShardingRules
+    return ShardingRules(FakeMesh(shape_map or {"data": 16, "model": 16}), cfg)
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "starcoder2-7b",
+                                  "kimi-k2-1t-a32b", "mamba2-130m",
+                                  "zamba2-1.2b", "whisper-tiny",
+                                  "internvl2-2b"])
+def test_param_specs_cover_every_leaf(arch):
+    cfg = get_config(arch)
+    model = build_model(cfg, ExecConfig(backend="xla"))
+    shapes = model.init_shapes()
+    rules = _rules(cfg)
+    specs = rules.params_specs(shapes)
+    for (pa, leaf), (pb, spec) in zip(
+            jax.tree_util.tree_flatten_with_path(shapes)[0],
+            jax.tree_util.tree_flatten_with_path(specs)[0]):
+        assert isinstance(spec, P), (jax.tree_util.keystr(pa), spec)
+        assert len(spec) <= leaf.ndim, (jax.tree_util.keystr(pa), spec, leaf.shape)
+        # every sharded dim must divide the axis product
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            total = int(np.prod([rules.mesh.shape[a] for a in axes]))
+            assert dim % total == 0, (jax.tree_util.keystr(pa), spec, leaf.shape)
+
+
+def test_tp_rules_megatron_pattern():
+    cfg = get_config("granite-3-8b")
+    model = build_model(cfg, ExecConfig(backend="xla"))
+    shapes = model.init_shapes()
+    specs = _rules(cfg).params_specs(shapes)
+    lyr = specs["layers"]
+    assert lyr["attn"]["wq"] == P(None, "data", "model")      # column parallel
+    assert lyr["attn"]["wo"] == P(None, "model", "data")      # row parallel
+    assert lyr["mlp"]["w_gate"] == P(None, "data", "model")
+    assert lyr["mlp"]["w_down"] == P(None, "model", "data")
+    # granite vocab (49155) doesn't divide 16 -> guard degrades to fsdp-only
+    assert specs["embed"] == P(None, "data")
+    cfg_q = get_config("qwen3-4b")                            # 151936 % 16 == 0
+    model_q = build_model(cfg_q, ExecConfig(backend="xla"))
+    specs_q = _rules(cfg_q).params_specs(model_q.init_shapes())
+    assert specs_q["embed"] == P("model", "data")             # vocab parallel
+
+
+def test_moe_expert_parallel_rules():
+    cfg = get_config("kimi-k2-1t-a32b")
+    model = build_model(cfg, ExecConfig(backend="xla"))
+    shapes = model.init_shapes()
+    specs = _rules(cfg).params_specs(shapes)
+    moe = specs["layers"]["moe"]
+    assert moe["w_gate"] == P(None, "model", "data", None)    # experts x fsdp
+    assert moe["w_down"] == P(None, "model", None, "data")
+
+
+def test_divisibility_guard_degrades_not_fails():
+    # mamba2-130m: 24 SSD heads don't divide model=16 -> A_log replicated
+    cfg = get_config("mamba2-130m")
+    model = build_model(cfg, ExecConfig(backend="xla"))
+    shapes = model.init_shapes()
+    specs = _rules(cfg).params_specs(shapes)
+    assert specs["layers"]["mamba"]["A_log"] in (P(None), P(None, None))
+    assert specs["layers"]["mamba"]["w_in"] == P(None, "data", None)
+
+
+def test_cache_specs_head_vs_sequence_sharding():
+    # granite kv=8 < model=16 -> cache shards sequence on model
+    cfg = get_config("granite-3-8b")
+    model = build_model(cfg, ExecConfig(backend="xla"))
+    rules = _rules(cfg)
+    shape = get_shape("decode_32k")
+    cache = model.cache_specs(shape.global_batch, shape.seq_len)
+    specs = rules.cache_specs(cache)
+    assert specs["k"][3] is None or specs["k"][3] != "model"
+    assert specs["k"][2] == "model"                # sequence-parallel cache
+    # qwen1.5 kv=16 == model -> heads shard
+    cfg2 = get_config("qwen1.5-0.5b")
+    model2 = build_model(cfg2, ExecConfig(backend="xla"))
+    cache2 = model2.cache_specs(shape.global_batch, shape.seq_len)
+    specs2 = _rules(cfg2).cache_specs(cache2)
+    assert specs2["k"][3] == "model"
+
+
+def test_long_context_batch1_shards_sequence_everywhere():
+    cfg = get_config("zamba2-1.2b")
+    model = build_model(cfg, ExecConfig(backend="xla"))
+    rules = _rules(cfg)
+    shape = get_shape("long_500k")
+    cache = model.cache_specs(1, shape.seq_len)
+    specs = rules.cache_specs(cache)
+    k_spec = specs["k"]
+    assert k_spec[1] is None                       # batch 1: unsharded
+    # zamba kv=32 divides model -> heads shard; 524288 seq shards over data
+    assert k_spec[3] == "model"
+    assert k_spec[2] in ("data", ("data",))
+
+
+def test_opt_state_inherits_param_specs():
+    from repro.optim import SGD
+    cfg = get_config("qwen3-4b")
+    model = build_model(cfg, ExecConfig(backend="xla"))
+    shapes = model.init_shapes()
+    rules = _rules(cfg)
+    opt = SGD(lr=0.1, momentum=0.9)
+    oshapes = jax.eval_shape(opt.init, shapes)
+    ospecs = rules.opt_specs(oshapes, shapes)
+    pspecs = rules.params_specs(shapes)
+    assert ospecs.momentum["layers"]["attn"]["wq"] == \
+        pspecs["layers"]["attn"]["wq"]
+    assert ospecs.step == P()
