@@ -8,8 +8,9 @@ Run:  PYTHONPATH=src python -m benchmarks.run [table ...]
 import sys
 import traceback
 
-from benchmarks import (bench_coldstart, bench_inference, bench_matmul,
-                        bench_micro, bench_roofline, bench_sgd_training)
+from benchmarks import (bench_coldstart, bench_dispatch, bench_inference,
+                        bench_matmul, bench_micro, bench_roofline,
+                        bench_sgd_training)
 
 TABLES = {
     "fig6": bench_sgd_training.main,
@@ -18,6 +19,7 @@ TABLES = {
     "fig9": bench_micro.main,
     "tab3": bench_coldstart.main,
     "roofline": bench_roofline.main,
+    "dispatch": bench_dispatch.main,
 }
 
 

@@ -12,7 +12,7 @@ import time
 
 import numpy as np
 
-from repro.core import FaasmRuntime, FunctionDef, chain, await_all
+from repro.core import FaasmRuntime, FunctionDef
 from repro.data import accuracy, hinge_loss, make_sparse_dataset
 from repro.state.ddo import SparseMatrixReadOnly, VectorAsync
 
@@ -38,8 +38,9 @@ def build_functions(n_features: int, n_cols: int, n_workers: int,
         for _ in range(n_epochs):
             args = [np.asarray([w * per, (w + 1) * per], np.int32).tobytes()
                     for w in range(n_workers)]
-            cids = chain(api, "weight_update", args)
-            rcs = await_all(api, cids)
+            # batch fan-out: one submission + one shared completion latch
+            cids = api.chain_call_many("weight_update", args)
+            rcs = api.await_all(cids)
             assert all(r == 0 for r in rcs), rcs
         return 0
 

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Fast tier-1 gate: the ROADMAP verify command minus the slow interpret-mode
+# kernel matrix (run `pytest -m slow` for the full kernel sweep).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q -p no:cacheprovider -m "not slow" "$@"

@@ -4,14 +4,16 @@ from repro.core.faaslet import (CONTAINER_OVERHEAD_BYTES,
                                 FaasletMemoryFault, ResourceLimitExceeded)
 from repro.core.host_interface import FaasmAPI, StateKeyError
 from repro.core.proto import ExecutableCache, ProtoFaaslet
-from repro.core.runtime import Call, FaasmRuntime, FunctionDef, Host
+from repro.core.runtime import (Call, CompletionLatch, FaasmRuntime,
+                                FunctionDef, Host)
 from repro.core.scheduler import LocalScheduler
 from repro.core.chain import await_all, chain, outputs
 from repro.core.vfs import VirtualFS
 
 __all__ = [
     "Faaslet", "FaasletMemoryFault", "ResourceLimitExceeded", "FaasmAPI",
-    "StateKeyError", "ExecutableCache", "ProtoFaaslet", "Call", "FaasmRuntime",
+    "StateKeyError", "ExecutableCache", "ProtoFaaslet", "Call",
+    "CompletionLatch", "FaasmRuntime",
     "FunctionDef", "Host", "LocalScheduler", "await_all", "chain", "outputs",
     "VirtualFS", "FAASLET_OVERHEAD_BYTES", "CONTAINER_OVERHEAD_BYTES",
 ]

@@ -5,13 +5,18 @@ from typing import Iterable, List, Sequence
 
 
 def chain(api, name: str, inputs: Sequence[bytes]) -> List[int]:
-    """Spawn one chained call per input; returns the call IDs."""
+    """Spawn one chained call per input; returns the call IDs (input order)."""
+    if hasattr(api, "chain_call_many"):
+        return api.chain_call_many(name, list(inputs))
     return [api.chain_call(name, inp) for inp in inputs]
 
 
 def await_all(api, call_ids: Iterable[int]) -> List[int]:
     """Block until every chained call finishes; returns their codes."""
-    return [api.await_call(cid) for cid in call_ids]
+    ids = list(call_ids)
+    if hasattr(api, "await_all"):
+        return api.await_all(ids)
+    return [api.await_call(cid) for cid in ids]
 
 
 def outputs(api, call_ids: Iterable[int]) -> List[bytes]:

@@ -18,7 +18,7 @@ import itertools
 import os
 import threading
 import time
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -54,8 +54,20 @@ class FaasmAPI:
         self.faaslet.usage.charge_net(n_out=len(args))
         return self.runtime.invoke(name, bytes(args), parent=self.call)
 
+    def chain_call_many(self, name: str, args_list) -> List[int]:
+        """Batch chain: one submission for the whole fan-out (ordered IDs)."""
+        args_list = [bytes(a) for a in args_list]
+        for a in args_list:
+            self.faaslet.usage.charge_net(n_out=len(a))
+        return self.runtime.invoke_many(name, args_list, parent=self.call)
+
     def await_call(self, call_id: int, timeout: Optional[float] = None) -> int:
         return self.runtime.wait(call_id, timeout=timeout)
+
+    def await_all(self, call_ids,
+                  timeout: Optional[float] = None) -> List[int]:
+        """Block on one shared latch until every chained call finishes."""
+        return self.runtime.wait_all(call_ids, timeout=timeout)
 
     def get_call_output(self, call_id: int) -> bytes:
         out = self.runtime.output(call_id)
@@ -76,7 +88,8 @@ class FaasmAPI:
         lt = self._local()
         if not lt.has(key) and not self.runtime.global_tier.exists(key):
             raise StateKeyError(key)
-        replica = lt.pull(key)
+        lt.pull(key)
+        replica = lt.replica(key)
         if self.host.isolation == "container":
             self.faaslet.usage.charge_net(n_in=replica.buf.size)
             return replica.buf.copy()
@@ -141,17 +154,13 @@ class FaasmAPI:
         self.faaslet.usage.charge_net(n_out=n)
 
     def pull_state(self, key: str, track_delta: bool = False) -> None:
-        before = self.runtime.global_tier.bytes_pulled[self.host.id]
-        self._local().pull(key)
+        moved = self._local().pull(key)
         if track_delta:
             self._local().snapshot_base(key)
-        moved = self.runtime.global_tier.bytes_pulled[self.host.id] - before
         self.faaslet.usage.charge_net(n_in=moved)
 
     def pull_state_chunk(self, key: str, chunk_idx: int) -> None:
-        before = self.runtime.global_tier.bytes_pulled[self.host.id]
-        self._local().pull_chunk(key, chunk_idx)
-        moved = self.runtime.global_tier.bytes_pulled[self.host.id] - before
+        moved = self._local().pull_chunk(key, chunk_idx)
         self.faaslet.usage.charge_net(n_in=moved)
 
     def append_state(self, key: str, value: bytes) -> None:

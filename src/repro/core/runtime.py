@@ -71,11 +71,41 @@ class Call:
     t_end: float = 0.0
     error: str = ""
     twin_id: Optional[int] = None                # speculative re-execution
+    primary_id: Optional[int] = None             # set on twins: who to adopt into
     event: threading.Event = field(default_factory=threading.Event)
+    _cb_lock: threading.Lock = field(default_factory=threading.Lock,
+                                     repr=False)
+    _callbacks: List[Callable[["Call"], None]] = field(default_factory=list,
+                                                       repr=False)
 
     @property
     def latency(self) -> float:
         return (self.t_end or time.perf_counter()) - self.t_submit
+
+    def add_done_callback(self, cb: Callable[["Call"], None]) -> None:
+        """Run ``cb(call)`` once the call completes (immediately if done)."""
+        with self._cb_lock:
+            if not self.event.is_set():
+                self._callbacks.append(cb)
+                return
+        cb(self)
+
+    def _settle(self, mutate: Callable[["Call"], None]) -> bool:
+        """Atomically apply the final result fields and mark the call done.
+
+        Only the first settle wins: a late completion (e.g. a straggler whose
+        speculative twin already adopted its result into us) must not
+        overwrite what waiters have observed.  Returns False if already done.
+        """
+        with self._cb_lock:
+            if self.event.is_set():
+                return False
+            mutate(self)
+            self.event.set()
+            cbs, self._callbacks = self._callbacks, []
+        for cb in cbs:
+            cb(self)
+        return True
 
 
 class Host:
@@ -153,11 +183,8 @@ class Host:
         try:
             self._run(call)
         except Exception as e:                    # defensive: never lose a call
-            call.error = f"host crash: {e!r}"
-            call.status = "failed"
-            call.return_code = 1
-            call.t_end = time.perf_counter()
-            call.event.set()
+            self.runtime._finish_call(call, rc=1, status="failed",
+                                      error=f"host crash: {e!r}")
         finally:
             with self._mutex:
                 self._inflight -= 1
@@ -202,15 +229,14 @@ class Host:
         api = FaasmAPI(faaslet, self, rt, call)
         t0 = time.perf_counter()
         try:
-            rc = fdef.fn(api)
-            call.return_code = int(rc) if rc is not None else 0
-            call.status = "done" if call.return_code == 0 else "failed"
+            ret = fdef.fn(api)
+            rc = int(ret) if ret is not None else 0
+            status = "done" if rc == 0 else "failed"
+            error = ""
         except Exception as e:
-            call.return_code = 1
-            call.status = "failed"
-            call.error = repr(e)
-        call.t_end = time.perf_counter()
-        dur = call.t_end - t0
+            rc, status, error = 1, "failed", repr(e)
+        t_end = time.perf_counter()
+        dur = t_end - t0
         faaslet.usage.charge_cpu(int(dur * 1e9))
         faaslet.calls_served += 1
 
@@ -232,7 +258,8 @@ class Host:
             if self.alive:
                 self._warm[call.fn].append(faaslet)
         self.beat()
-        call.event.set()
+        self.runtime._finish_call(call, rc=rc, status=status, error=error,
+                                  t_end=t_end)
 
     # -- failure / drain ---------------------------------------------------------
 
@@ -258,12 +285,40 @@ class _InitCall:
     output = b""
 
 
+class CompletionLatch:
+    """Counts down once per completed call; waiters block on a single event.
+
+    ``wait_all`` registers one latch across N calls instead of N sequential
+    ``Event.wait`` rounds, so a thousand-call fan-out wakes its waiter once.
+    """
+
+    def __init__(self, n: int):
+        self._lock = threading.Lock()
+        self._remaining = n
+        self._event = threading.Event()
+        if n <= 0:
+            self._event.set()
+
+    def count_down(self, _call: Optional[Call] = None) -> None:
+        with self._lock:
+            self._remaining -= 1
+            if self._remaining <= 0:
+                self._event.set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._event.wait(timeout)
+
+
 class FaasmRuntime:
     def __init__(self, n_hosts: int = 2, *, isolation: str = "faaslet",
                  use_proto: bool = True, capacity: int = 8,
                  chunk_size: int = 1 << 20,
                  straggler_timeout: Optional[float] = None,
-                 heartbeat_timeout: float = 5.0):
+                 heartbeat_timeout: Optional[float] = None):
+        # heartbeat_timeout: when set, the background monitor declares hosts
+        # silent for that long (with calls in flight) dead and requeues their
+        # work.  Opt-in: a host only beats at call boundaries, so any timeout
+        # shorter than a legitimate call would hard-fail a healthy host.
         assert isolation in ("faaslet", "container")
         self.isolation = isolation
         self.use_proto = use_proto and isolation == "faaslet"
@@ -276,6 +331,7 @@ class FaasmRuntime:
         self.hosts: Dict[str, Host] = {}
         self.schedulers: Dict[str, LocalScheduler] = {}
         self._calls: Dict[int, Call] = {}
+        self._active: set = set()                # ids of not-yet-completed calls
         self._rr = itertools.count()
         self._mutex = threading.RLock()
         self._net: Dict[tuple, queue.Queue] = defaultdict(queue.Queue)
@@ -284,6 +340,13 @@ class FaasmRuntime:
         self.max_attempts = 3
         for i in range(n_hosts):
             self.add_host(capacity=capacity)
+        # Background monitor: straggler speculation + heartbeat failure
+        # detection fire from here, so no waiter ever has to spin-poll.
+        self._monitor_cv = threading.Condition()
+        self._monitor_stop = False
+        self._monitor_thread = threading.Thread(
+            target=self._monitor_loop, name="faasm-monitor", daemon=True)
+        self._monitor_thread.start()
 
     # -- cluster elasticity ------------------------------------------------------
 
@@ -357,22 +420,66 @@ class FaasmRuntime:
 
     def invoke(self, fn: str, input_data: bytes = b"",
                parent: Optional[Call] = None) -> int:
+        return self.invoke_many(fn, [input_data], parent=parent)[0]
+
+    def invoke_many(self, fn: str, inputs, parent: Optional[Call] = None
+                    ) -> List[int]:
+        """Submit one call per input in a single batch; returns all call IDs.
+
+        The IDs come back in input order — pair with :meth:`wait_all` for
+        thousand-call fan-outs without per-call round trips.
+        """
         if fn not in self.functions:
             raise KeyError(f"function {fn!r} not uploaded")
-        call = Call(id=next(_call_ids), fn=fn, input=bytes(input_data),
-                    parent=parent.id if parent else None,
-                    t_submit=time.perf_counter())
+        pid = parent.id if parent is not None else None
+        calls = []
         with self._mutex:
-            self._calls[call.id] = call
-        self._dispatch(call)
-        return call.id
+            for inp in inputs:
+                call = Call(id=next(_call_ids), fn=fn, input=bytes(inp),
+                            parent=pid, t_submit=time.perf_counter())
+                self._calls[call.id] = call
+                self._active.add(call.id)
+                calls.append(call)
+        self._dispatch_batch(calls)
+        self._kick_monitor()
+        return [c.id for c in calls]
+
+    def _dispatch_batch(self, calls: List[Call]) -> None:
+        """Place a homogeneous batch with one warm-set resolution.
+
+        Single calls keep the full Omega placement; for a fan-out the warm
+        host set is read once and the batch round-robins across it, so
+        thousand-call waves don't pay a placement lookup per call."""
+        if not calls:
+            return
+        if len(calls) == 1:
+            self._dispatch(calls[0])
+            return
+        fn = calls[0].fn
+        alive = self.alive_hosts()
+        if not alive:
+            for c in calls:
+                self._finish_call(c, status="failed", error="no alive hosts")
+            return
+        entry = alive[next(self._rr) % len(alive)]
+        sched = self.schedulers[entry.id]
+        pool = [self.hosts[h] for h in sched.warm_hosts(fn)
+                if h in self.hosts and self.hosts[h].alive]
+        if not pool:
+            sched.register_warm(fn)          # batch cold-starts on the entry
+            pool = [entry]
+        n = len(pool)
+        for i, c in enumerate(calls):
+            c.attempts += 1
+            try:
+                pool[i % n].submit(c)
+            except Exception:
+                self._dispatch(c)            # full path: re-place or fail
 
     def _dispatch(self, call: Call) -> None:
         alive = self.alive_hosts()
         if not alive:
-            call.status = "failed"
-            call.error = "no alive hosts"
-            call.event.set()
+            self._finish_call(call, status="failed", error="no alive hosts")
             return
         # round-robin entry point, then Omega placement (§5.1)
         entry = alive[next(self._rr) % len(alive)]
@@ -380,34 +487,73 @@ class FaasmRuntime:
         if not target.alive:
             target = entry
         call.attempts += 1
-        target.submit(call)
+        try:
+            target.submit(call)
+        except Exception as e:
+            # target died between placement and submit: retry elsewhere, and
+            # never leave the call pending (a waiter would hang forever)
+            if call.attempts < self.max_attempts:
+                self._dispatch(call)
+            else:
+                self._finish_call(call, status="failed",
+                                  error=f"dispatch failed: {e!r}")
 
     def wait(self, call_id: int, timeout: Optional[float] = None) -> int:
+        """Block until the call completes.  Event-driven: latency is bounded
+        by the work itself, not by a polling granularity."""
         call = self._calls[call_id]
-        deadline = None if timeout is None else time.monotonic() + timeout
-        while True:
-            step = 0.05
-            if self.straggler_timeout and call.twin_id is None:
-                step = min(step, self.straggler_timeout / 4)
-            if call.event.wait(timeout=step):
-                return call.return_code
-            # speculative twin finished first?  adopt its result
-            twin = self._calls.get(call.twin_id) if call.twin_id else None
-            if twin is not None and twin.event.is_set() and \
-                    twin.status == "done":
-                call.output = twin.output
-                call.return_code = twin.return_code
-                call.status = "done"
-                call.t_end = twin.t_end
-                call.event.set()
-                return call.return_code
-            self._check_failures(call)
-            if (self.straggler_timeout and call.twin_id is None
-                    and call.status == "running"
-                    and time.perf_counter() - call.t_start > self.straggler_timeout):
-                self._speculate(call)
-            if deadline is not None and time.monotonic() > deadline:
-                raise TimeoutError(f"call {call_id} timed out")
+        if not call.event.wait(timeout=timeout):
+            raise TimeoutError(f"call {call_id} timed out")
+        return call.return_code
+
+    def wait_all(self, call_ids, timeout: Optional[float] = None) -> List[int]:
+        """Wait for a batch of calls on one shared completion latch.
+
+        Returns the calls' return codes in the order given; per-call failures
+        are isolated (a failed call yields its nonzero code, others still
+        complete)."""
+        ids = list(call_ids)
+        calls = [self._calls[cid] for cid in ids]
+        latch = CompletionLatch(len(calls))
+        for c in calls:
+            c.add_done_callback(latch.count_down)
+        if not latch.wait(timeout):
+            pending = [c.id for c in calls if not c.event.is_set()]
+            raise TimeoutError(f"calls {pending} timed out")
+        return [c.return_code for c in calls]
+
+    # -- completion (the single exit path for every call) ---------------------
+
+    def _finish_call(self, call: Call, *, rc: Optional[int] = None,
+                     status: str = "failed", error: str = "",
+                     t_end: Optional[float] = None) -> None:
+        """Settle ``call`` exactly once: write the final result fields, fire
+        its event + callbacks, and adopt a winning twin's result into its
+        primary.  Late completions (straggler finishing after its twin was
+        adopted) are no-ops."""
+        def mutate(c: Call) -> None:
+            if rc is not None:
+                c.return_code = rc
+            c.status = status
+            if error:
+                c.error = error
+            c.t_end = t_end if t_end is not None else time.perf_counter()
+
+        call._settle(mutate)
+        with self._mutex:
+            self._active.discard(call.id)
+        if call.primary_id is not None and call.status == "done":
+            primary = self._calls.get(call.primary_id)
+            if primary is not None:
+                def adopt(p: Call) -> None:
+                    p.output = call.output
+                    p.return_code = call.return_code
+                    p.status = "done"
+                    p.t_end = call.t_end
+
+                primary._settle(adopt)
+                with self._mutex:
+                    self._active.discard(primary.id)
 
     def output(self, call_id: int) -> bytes:
         return self._calls[call_id].output
@@ -430,20 +576,13 @@ class FaasmRuntime:
                     if c.host == host_id and not c.event.is_set()]
         for c in lost:
             if c.attempts >= self.max_attempts:
-                c.status = "failed"
-                c.error = f"host {host_id} lost, retries exhausted"
-                c.event.set()
+                self._finish_call(
+                    c, status="failed",
+                    error=f"host {host_id} lost, retries exhausted")
             else:
                 c.status = "pending"
                 c.host = None
                 self._dispatch(c)
-
-    def _check_failures(self, call: Call) -> None:
-        if call.host is None:
-            return
-        h = self.hosts.get(call.host)
-        if h is not None and not h.alive and not call.event.is_set():
-            self._requeue_lost(call.host)
 
     def _speculate(self, call: Call) -> bool:
         """Straggler mitigation: duplicate the call; first completion wins."""
@@ -454,24 +593,83 @@ class FaasmRuntime:
         twin = Call(id=next(_call_ids), fn=call.fn, input=call.input,
                     parent=call.parent, t_submit=time.perf_counter())
         twin.attempts = call.attempts
+        twin.primary_id = call.id
         with self._mutex:
             self._calls[twin.id] = twin
+            self._active.add(twin.id)
         call.twin_id = twin.id
         others[0].submit(twin)
         return True
 
-    def monitor_once(self) -> List[str]:
+    def monitor_once(self, timeout: Optional[float] = None) -> List[str]:
         """Heartbeat sweep: declare silent hosts dead, requeue their calls."""
+        timeout = timeout if timeout is not None else self.heartbeat_timeout
+        if timeout is None:
+            return []
         now = time.monotonic()
         dead = []
         for h in list(self.hosts.values()):
-            if h.alive and now - h.heartbeat > self.heartbeat_timeout and \
+            if h.alive and now - h.heartbeat > timeout and \
                     h._inflight > 0:
                 h.fail()
                 self.schedulers[h.id].deregister_warm(h.id)
                 self._requeue_lost(h.id)
                 dead.append(h.id)
         return dead
+
+    # -- background monitor (event-driven lifecycle, no waiter spinning) -------
+
+    def _kick_monitor(self) -> None:
+        with self._monitor_cv:
+            self._monitor_cv.notify_all()
+
+    def _monitor_interval(self) -> float:
+        iv = 0.25
+        if self.heartbeat_timeout:
+            iv = min(iv, self.heartbeat_timeout / 4)
+        if self.straggler_timeout:
+            iv = min(iv, self.straggler_timeout / 4)
+        return max(iv, 0.01)
+
+    def _monitor_loop(self) -> None:
+        while True:
+            with self._mutex:
+                idle = not self._active
+            with self._monitor_cv:
+                if self._monitor_stop:
+                    return
+                self._monitor_cv.wait(0.5 if idle else self._monitor_interval())
+                if self._monitor_stop:
+                    return
+            try:
+                self._monitor_sweep()
+            except Exception:                    # never let the monitor die
+                pass
+
+    def _monitor_sweep(self) -> None:
+        self.monitor_once()
+        with self._mutex:
+            active = [self._calls[cid] for cid in self._active
+                      if cid in self._calls]
+        # calls stranded on hosts that died without a requeue (e.g. a direct
+        # Host.fail) are re-dispatched here
+        stranded_hosts = set()
+        for c in active:
+            if c.host is not None and not c.event.is_set():
+                h = self.hosts.get(c.host)
+                if h is not None and not h.alive:
+                    stranded_hosts.add(c.host)
+        for hid in stranded_hosts:
+            self._requeue_lost(hid)
+        # straggler speculation: duplicate long-running calls (twins adopt
+        # their result into the primary on completion)
+        if self.straggler_timeout:
+            now = time.perf_counter()
+            for c in active:
+                if (c.twin_id is None and c.primary_id is None
+                        and c.status == "running" and not c.event.is_set()
+                        and now - c.t_start > self.straggler_timeout):
+                    self._speculate(c)
 
     # -- virtual networking (host interface sockets) ----------------------------------
 
@@ -503,6 +701,10 @@ class FaasmRuntime:
         }
 
     def shutdown(self) -> None:
+        with self._monitor_cv:
+            self._monitor_stop = True
+            self._monitor_cv.notify_all()
+        self._monitor_thread.join(timeout=5.0)
         for h in self.hosts.values():
             if h.alive:
                 h.drain()

@@ -22,6 +22,10 @@ class LocalScheduler:
     def __init__(self, host, runtime):
         self.host = host
         self.runtime = runtime
+        # warm-set read cache, invalidated by the key's write version in the
+        # global tier — placement on the hot path skips the JSON re-parse
+        # unless some scheduler actually changed the set.
+        self._warm_cache = {}                   # fn -> (version, hosts)
 
     # -- warm-set shared state --------------------------------------------------
 
@@ -31,12 +35,19 @@ class LocalScheduler:
     def warm_hosts(self, fn: str) -> List[str]:
         gt = self.runtime.global_tier
         key = self._warm_key(fn)
+        ver = gt.version(key)
+        cached = self._warm_cache.get(fn)
+        if cached is not None and cached[0] == ver:
+            return cached[1]
         if not gt.exists(key):
-            return []
-        try:
-            return json.loads(gt.get(key, host=self.host.id).decode())
-        except Exception:
-            return []
+            hosts: List[str] = []
+        else:
+            try:
+                hosts = json.loads(gt.get(key, host=self.host.id).decode())
+            except Exception:
+                hosts = []
+        self._warm_cache[fn] = (ver, hosts)
+        return hosts
 
     def register_warm(self, fn: str) -> None:
         gt = self.runtime.global_tier

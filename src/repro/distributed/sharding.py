@@ -39,6 +39,27 @@ def _dim(leaf, i):
     return leaf.shape[i]
 
 
+def _axis_entry(axes):
+    """Collapse an axis collection into a canonical PartitionSpec entry:
+    ``[] -> None``, ``['model'] -> 'model'`` (scalar, not a 1-tuple),
+    ``['pod', 'data'] -> ('pod', 'data')``."""
+    axes = tuple(axes)
+    if not axes:
+        return None
+    if len(axes) == 1:
+        return axes[0]
+    return axes
+
+
+def _has_axis(entry, name: str) -> bool:
+    """Membership test on a spec entry that may be None, a scalar or a tuple."""
+    if entry is None:
+        return False
+    if isinstance(entry, str):
+        return entry == name
+    return name in entry
+
+
 @dataclasses.dataclass
 class ShardingRules:
     mesh: Mesh
@@ -88,7 +109,7 @@ class ShardingRules:
             if rem % sz == 0:
                 axs.append(a)
                 rem //= sz
-        return tuple(axs) if axs else None
+        return _axis_entry(axs)
 
     # -- parameter rules ----------------------------------------------------------
 
@@ -204,7 +225,7 @@ class ShardingRules:
             if ("'k'" in name or "'v'" in name or "'ck'" in name
                     or "'cv'" in name or "first_" in name) and nd == 5:
                 L, B, S, K, D = leaf.shape
-                model_used = "model" in (b_axes or ())
+                model_used = _has_axis(b_axes, "model")
                 if self._model(K) is not None and not model_used:
                     spec[3] = self._model(K)
                     model_used = True
@@ -220,16 +241,18 @@ class ShardingRules:
                 if (self.model_ax and not model_used
                         and rem % self.model_size == 0):
                     seq_axes.append(self.model_ax)
-                spec[2] = tuple(seq_axes) if seq_axes else None
+                spec[2] = _axis_entry(seq_axes)
             elif "'ssm'" in name and nd == 5:
                 L, B, H, Pd, N = leaf.shape
-                if b_axes is None or "model" not in (b_axes or ()):
-                    if self._model(N) is not None and self.model_ax not in (b_axes or ()):
+                if not _has_axis(b_axes, "model"):
+                    if self._model(N) is not None and \
+                            not _has_axis(b_axes, self.model_ax or ""):
                         spec[4] = self._model(N)
             elif "'conv'" in name and nd == 4:
                 L, B, W, C = leaf.shape
-                if b_axes is None or "model" not in (b_axes or ()):
-                    if self._model(C) is not None and self.model_ax not in (b_axes or ()):
+                if not _has_axis(b_axes, "model"):
+                    if self._model(C) is not None and \
+                            not _has_axis(b_axes, self.model_ax or ""):
                         spec[3] = self._model(C)
             return P(*spec)
 

@@ -44,6 +44,29 @@ def interpret_mode(backend: str) -> bool:
     return backend == "pallas_interpret"
 
 
+def tpu_compiler_params(dimension_semantics=None, **kwargs):
+    """Build Pallas TPU compiler params across JAX versions.
+
+    Newer JAX exposes ``pltpu.CompilerParams``; older releases call it
+    ``TPUCompilerParams``.  Returns ``None`` when neither is constructible,
+    which ``pl.pallas_call`` accepts (defaults apply).
+    """
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except ImportError:
+        return None
+    cls = getattr(pltpu, "CompilerParams", None) or \
+        getattr(pltpu, "TPUCompilerParams", None)
+    if cls is None:
+        return None
+    if dimension_semantics is not None:
+        kwargs["dimension_semantics"] = tuple(dimension_semantics)
+    try:
+        return cls(**kwargs)
+    except TypeError:
+        return None
+
+
 def cdiv(a: int, b: int) -> int:
     return -(-a // b)
 

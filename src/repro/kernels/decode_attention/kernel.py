@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import NEG_INF, cdiv
+from repro.kernels.common import NEG_INF, cdiv, tpu_compiler_params
 
 _MIN_LANES = 128
 
@@ -94,11 +94,7 @@ def decode_attention_pallas(q, k, v, lengths, *, scale: float | None = None,
             pltpu.VMEM((Gp, _MIN_LANES), jnp.float32),
         ],
     )
-    try:
-        compiler_params = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"))
-    except TypeError:
-        compiler_params = None
+    compiler_params = tpu_compiler_params(("parallel", "parallel", "arbitrary"))
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

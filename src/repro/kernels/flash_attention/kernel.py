@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import NEG_INF, cdiv
+from repro.kernels.common import NEG_INF, cdiv, tpu_compiler_params
 
 # TPU VREG minor dimension; accumulators are padded to this many lanes.
 _MIN_LANES = 128
@@ -111,11 +111,8 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
     ]
     out_specs = pl.BlockSpec((1, block_q, 1, D), lambda b, h, iq, ik: (b, iq, h, 0))
 
-    try:
-        compiler_params = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"))
-    except TypeError:  # older naming
-        compiler_params = None
+    compiler_params = tpu_compiler_params(
+        ("parallel", "parallel", "parallel", "arbitrary"))
 
     return pl.pallas_call(
         kernel,

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import tpu_compiler_params
+
 
 def _gmm_kernel(tile_expert_ref, x_ref, w_ref, o_ref):
     del tile_expert_ref  # consumed by the index maps
@@ -51,11 +53,7 @@ def gmm_pallas(x, w, tile_expert, *, block_m: int, block_n: int,
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, te: (i, j)),
     )
-    try:
-        compiler_params = pltpu.CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary"))
-    except TypeError:
-        compiler_params = None
+    compiler_params = tpu_compiler_params(("arbitrary", "arbitrary"))
     return pl.pallas_call(
         _gmm_kernel,
         grid_spec=grid_spec,

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import tpu_compiler_params
+
 
 def _ssd_kernel(A_ref, D_ref, x_ref, dt_ref, B_ref, C_ref, init_ref,
                 y_ref, final_ref, state_ref, *, chunk: int, n_chunks: int):
@@ -97,11 +99,7 @@ def ssd_pallas(x, dt, A, B, C, D_skip, initial_state, *, chunk: int,
         ],
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
     )
-    try:
-        compiler_params = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"))
-    except TypeError:
-        compiler_params = None
+    compiler_params = tpu_compiler_params(("parallel", "parallel", "arbitrary"))
     y, final_state = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

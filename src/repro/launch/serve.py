@@ -3,6 +3,10 @@
 Builds prefill + serve steps for the selected architecture and runs a batched
 request loop (greedy decode) — the per-request orchestration that the FAASM
 runtime drives in `examples/inference_serving.py`.
+
+``--faasm-requests N`` additionally pushes an N-request wave through the FAASM
+runtime's batch invocation path (``invoke_many`` + ``wait_all`` on a shared
+completion latch) and reports p50/p99 dispatch latency and batch throughput.
 """
 from __future__ import annotations
 
@@ -21,6 +25,78 @@ from repro.launch.steps import make_prefill_step, make_serve_step
 from repro.models import ExecConfig, build_model
 
 
+def make_infer_function(model, treedef, host_leaves, prompt_len: int = 16,
+                        cache_key=("serve", "fwd")):
+    """Build the FAASM ``infer`` FunctionDef for a single-shot forward pass.
+
+    The jitted executable lands in the runtime's ExecutableCache under
+    ``cache_key``; the (numpy, picklable) weights travel in the Proto-Faaslet
+    snapshot.  Shared by :func:`run_faasm_fanout` and
+    ``examples/inference_serving.py``."""
+    from repro.core import FunctionDef
+
+    def _build_fwd():
+        fwd = jax.jit(lambda p, t: model.logits(p, t))
+        p = jax.tree_util.tree_unflatten(
+            treedef, [jnp.asarray(x) for x in host_leaves])
+        fwd(p, jnp.zeros((1, prompt_len), jnp.int32)).block_until_ready()
+        return fwd
+
+    def init(api):
+        api.runtime.exec_cache.get_or_build(cache_key, _build_fwd)
+        return {"params": host_leaves}
+
+    def infer(api):
+        state = api.host.user_state(api.faaslet)
+        fwd, _, _ = api.runtime.exec_cache.get_or_build(cache_key, _build_fwd)
+        p = jax.tree_util.tree_unflatten(
+            treedef, [jnp.asarray(x) for x in state["params"]])
+        tokens = np.frombuffer(api.read_call_input(),
+                               np.int32).reshape(1, -1)
+        logits = fwd(p, jnp.asarray(tokens))
+        api.write_call_output(
+            np.asarray(jnp.argmax(logits[0, -1])).tobytes())
+        return 0
+
+    return FunctionDef("infer", infer, init_fn=init)
+
+
+def run_faasm_fanout(model, params, vocab_size: int, n_requests: int,
+                     prompt_len: int = 16, n_hosts: int = 1,
+                     capacity: int = 8) -> dict:
+    """Serve ``n_requests`` single-shot requests through the FAASM runtime.
+
+    Each request is one Faaslet call running the jitted forward pass; the
+    whole wave is submitted with ``invoke_many`` and awaited on one shared
+    latch (``wait_all``), the thousand-call fan-out path."""
+    from repro.core import FaasmRuntime
+
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    host_leaves = [np.asarray(x) for x in flat]
+    rt = FaasmRuntime(n_hosts=n_hosts, capacity=capacity)
+    try:
+        rt.upload(make_infer_function(model, treedef, host_leaves,
+                                      prompt_len=prompt_len))
+        rng = np.random.default_rng(0)
+        payloads = [rng.integers(0, vocab_size, prompt_len,
+                                 dtype=np.int32).tobytes()
+                    for _ in range(n_requests)]
+        # warm every executor before timing the wave
+        rt.wait_all(rt.invoke_many("infer", payloads[:capacity]), timeout=300)
+        t0 = time.perf_counter()
+        cids = rt.invoke_many("infer", payloads)
+        rcs = rt.wait_all(cids, timeout=600)
+        wall = time.perf_counter() - t0
+        assert all(r == 0 for r in rcs), rcs
+        lat_ms = np.asarray([rt.call(c).latency for c in cids]) * 1e3
+        return {"requests": n_requests, "wall_s": wall,
+                "throughput_rps": n_requests / wall,
+                "p50_ms": float(np.percentile(lat_ms, 50)),
+                "p99_ms": float(np.percentile(lat_ms, 99))}
+    finally:
+        rt.shutdown()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b")
@@ -29,6 +105,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--faasm-requests", type=int, default=0,
+                    help="also fan out N requests through the FAASM runtime "
+                         "(invoke_many/wait_all batch path)")
+    ap.add_argument("--faasm-hosts", type=int, default=1)
     args = ap.parse_args()
 
     if args.smoke:
@@ -79,6 +159,14 @@ def main():
           f"{args.new_tokens - 1} decode steps in {decode_s * 1e3:.1f}ms "
           f"({(args.new_tokens - 1) * B / max(decode_s, 1e-9):.1f} tok/s)")
     print("generated ids[0]:", gen[0][:12], "...")
+
+    if args.faasm_requests > 0:
+        r = run_faasm_fanout(model, params, cfg.vocab_size,
+                             args.faasm_requests, prompt_len=S,
+                             n_hosts=args.faasm_hosts)
+        print(f"faasm fan-out: {r['requests']} reqs in {r['wall_s']:.2f}s "
+              f"({r['throughput_rps']:.1f} req/s) "
+              f"p50={r['p50_ms']:.1f}ms p99={r['p99_ms']:.1f}ms")
 
 
 if __name__ == "__main__":

@@ -5,17 +5,27 @@ arrays (the paper's language-agnostic representation); large values are split
 into fixed-size **state chunks** that can be pulled/pushed independently, so a
 Faaslet replicates only the subsets it touches (Fig. 4, value C).
 
+Concurrency: the store is **lock-striped** — keys hash onto a fixed array of
+stripes, each stripe owning its own mutex, sub-map and transfer counters, so
+chunk transfers (``get_range``/``set_range``, the primitives behind
+``LocalTier.pull_chunk``/``push_dirty``) on *different* keys never contend.
+Per-key metadata (the global read/write lock implementing
+``lock_state_global_read/write``, plus a write version) lives next to the
+value in its stripe.
+
 The store tracks per-host transfer bytes — the experiments' "network
-transfer" metric (Fig. 6b) reads from here.  Global read/write locks per key
-implement ``lock_state_global_read/write``.
+transfer" metric (Fig. 6b) reads from here.
 """
 from __future__ import annotations
 
 import threading
+import zlib
 from collections import defaultdict
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 DEFAULT_CHUNK = 1 << 20          # 1 MiB state chunks
+DEFAULT_STRIPES = 64
 
 
 class RWLock:
@@ -53,6 +63,35 @@ class RWLock:
             self._cond.notify_all()
 
 
+@dataclass
+class KeyMeta:
+    """Per-key metadata co-located with the value in its stripe."""
+
+    version: int = 0                 # stripe-monotonic; stamped on every write
+
+
+class _Stripe:
+    """One lock stripe: a mutex guarding a sub-map of keys + its counters."""
+
+    __slots__ = ("lock", "store", "meta", "locks", "vc", "pulled", "pushed")
+
+    def __init__(self):
+        self.lock = threading.RLock()
+        self.store: Dict[str, bytearray] = {}
+        self.meta: Dict[str, KeyMeta] = {}
+        # RW locks live outside the meta map: a delete must not orphan a lock
+        # some thread is holding, and version numbers draw from a monotonic
+        # per-stripe counter so delete+recreate never aliases a cached version
+        self.locks: Dict[str, RWLock] = {}
+        self.vc = 0
+        self.pulled: Dict[str, int] = {}     # per-host transfer bytes
+        self.pushed: Dict[str, int] = {}
+
+    def bump(self, key: str) -> None:
+        self.vc += 1
+        self.meta.setdefault(key, KeyMeta()).version = self.vc
+
+
 class GlobalTier:
     """In-memory stand-in for the distributed KVS backing the global tier.
 
@@ -62,73 +101,92 @@ class GlobalTier:
     many bytes) is real and measurable.
     """
 
-    def __init__(self, chunk_size: int = DEFAULT_CHUNK):
+    def __init__(self, chunk_size: int = DEFAULT_CHUNK,
+                 n_stripes: int = DEFAULT_STRIPES):
         self.chunk_size = chunk_size
-        self._store: Dict[str, bytearray] = {}
-        self._locks: Dict[str, RWLock] = defaultdict(RWLock)
-        self._mutex = threading.RLock()
-        self.bytes_pulled: Dict[str, int] = defaultdict(int)    # per host
-        self.bytes_pushed: Dict[str, int] = defaultdict(int)
+        self.n_stripes = max(1, n_stripes)
+        self._stripes = [_Stripe() for _ in range(self.n_stripes)]
+
+    def _stripe(self, key: str) -> _Stripe:
+        return self._stripes[zlib.crc32(key.encode()) % self.n_stripes]
 
     # -- basic KV -----------------------------------------------------------
 
     def exists(self, key: str) -> bool:
-        with self._mutex:
-            return key in self._store
+        s = self._stripe(key)
+        with s.lock:
+            return key in s.store
 
     def keys(self) -> List[str]:
-        with self._mutex:
-            return list(self._store.keys())
+        out: List[str] = []
+        for s in self._stripes:
+            with s.lock:
+                out.extend(s.store.keys())
+        return out
 
     def size(self, key: str) -> int:
-        with self._mutex:
-            return len(self._store.get(key, b""))
+        s = self._stripe(key)
+        with s.lock:
+            return len(s.store.get(key, b""))
 
     def delete(self, key: str) -> None:
-        with self._mutex:
-            self._store.pop(key, None)
+        s = self._stripe(key)
+        with s.lock:
+            s.store.pop(key, None)
+            s.meta.pop(key, None)
 
     def get(self, key: str, *, host: str = "?") -> bytes:
-        with self._mutex:
-            val = bytes(self._store[key])
-        self.bytes_pulled[host] += len(val)
+        s = self._stripe(key)
+        with s.lock:
+            val = bytes(s.store[key])
+            s.pulled[host] = s.pulled.get(host, 0) + len(val)
         return val
 
     def set(self, key: str, value: bytes, *, host: str = "?") -> None:
-        with self._mutex:
-            self._store[key] = bytearray(value)
-        self.bytes_pushed[host] += len(value)
+        s = self._stripe(key)
+        with s.lock:
+            s.store[key] = bytearray(value)
+            s.bump(key)
+            s.pushed[host] = s.pushed.get(host, 0) + len(value)
 
     def append(self, key: str, value: bytes, *, host: str = "?") -> None:
-        with self._mutex:
-            self._store.setdefault(key, bytearray()).extend(value)
-        self.bytes_pushed[host] += len(value)
+        s = self._stripe(key)
+        with s.lock:
+            s.store.setdefault(key, bytearray()).extend(value)
+            s.bump(key)
+            s.pushed[host] = s.pushed.get(host, 0) + len(value)
 
     # -- chunked access ------------------------------------------------------
+    #
+    # get_range / set_range are the transfer primitives: LocalTier.pull_chunk
+    # and push_dirty move every chunk through them, one stripe lock per key.
 
     def get_range(self, key: str, offset: int, length: int, *,
                   host: str = "?") -> bytes:
-        with self._mutex:
-            buf = self._store[key]
+        s = self._stripe(key)
+        with s.lock:
+            buf = s.store[key]
             if offset < 0 or offset + length > len(buf):
                 raise IndexError(
                     f"state range [{offset}, {offset + length}) out of bounds "
                     f"for {key!r} of size {len(buf)}")
             val = bytes(buf[offset:offset + length])
-        self.bytes_pulled[host] += length
+            s.pulled[host] = s.pulled.get(host, 0) + length
         return val
 
     def set_range(self, key: str, offset: int, value: bytes, *,
                   host: str = "?") -> None:
-        with self._mutex:
-            buf = self._store.setdefault(key, bytearray())
+        s = self._stripe(key)
+        with s.lock:
+            buf = s.store.setdefault(key, bytearray())
             end = offset + len(value)
             if offset < 0:
                 raise IndexError("negative state offset")
             if end > len(buf):
                 buf.extend(b"\x00" * (end - len(buf)))
             buf[offset:end] = value
-        self.bytes_pushed[host] += len(value)
+            s.bump(key)
+            s.pushed[host] = s.pushed.get(host, 0) + len(value)
 
     def n_chunks(self, key: str) -> int:
         sz = self.size(key)
@@ -139,17 +197,50 @@ class GlobalTier:
         start = idx * self.chunk_size
         return start, min(self.chunk_size, sz - start)
 
-    # -- global locks -------------------------------------------------------
+    # -- global locks / metadata ----------------------------------------------
 
     def lock(self, key: str) -> RWLock:
-        with self._mutex:
-            return self._locks[key]
+        s = self._stripe(key)
+        with s.lock:
+            return s.locks.setdefault(key, RWLock())
+
+    def version(self, key: str) -> int:
+        """Write version of ``key`` (0 if never written)."""
+        s = self._stripe(key)
+        with s.lock:
+            m = s.meta.get(key)
+            return m.version if m is not None else 0
 
     # -- metrics --------------------------------------------------------------
 
+    @property
+    def bytes_pulled(self) -> Dict[str, int]:
+        """Per-host pulled bytes, aggregated across stripes (read-only view)."""
+        out: Dict[str, int] = defaultdict(int)
+        for s in self._stripes:
+            with s.lock:
+                for h, n in s.pulled.items():
+                    out[h] += n
+        return out
+
+    @property
+    def bytes_pushed(self) -> Dict[str, int]:
+        out: Dict[str, int] = defaultdict(int)
+        for s in self._stripes:
+            with s.lock:
+                for h, n in s.pushed.items():
+                    out[h] += n
+        return out
+
     def total_transfer(self) -> int:
-        return sum(self.bytes_pulled.values()) + sum(self.bytes_pushed.values())
+        total = 0
+        for s in self._stripes:
+            with s.lock:
+                total += sum(s.pulled.values()) + sum(s.pushed.values())
+        return total
 
     def reset_metrics(self) -> None:
-        self.bytes_pulled.clear()
-        self.bytes_pushed.clear()
+        for s in self._stripes:
+            with s.lock:
+                s.pulled.clear()
+                s.pushed.clear()

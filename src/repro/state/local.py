@@ -74,10 +74,12 @@ class LocalTier:
 
     # -- pull / push (tier synchronisation) ----------------------------------------
 
-    def pull(self, key: str) -> Replica:
-        """Ensure the full value is replicated locally."""
+    def pull(self, key: str) -> int:
+        """Ensure the full value is replicated locally.  Returns bytes moved
+        (0 on a local hit) — symmetric with :meth:`push`."""
         size = self.global_tier.size(key)
         r = self.replica(key, size)
+        moved = 0
         r.lock.acquire_write()
         try:
             if not r.full:
@@ -85,14 +87,17 @@ class LocalTier:
                 r.buf[:len(data)] = np.frombuffer(data, np.uint8)
                 r.full = True
                 r.present_chunks = set(range(self.global_tier.n_chunks(key)))
+                moved = len(data)
         finally:
             r.lock.release_write()
-        return r
+        return moved
 
-    def pull_chunk(self, key: str, chunk_idx: int) -> Replica:
-        """Replicate a single state chunk (Fig. 4: partial values)."""
+    def pull_chunk(self, key: str, chunk_idx: int) -> int:
+        """Replicate a single state chunk (Fig. 4: partial values).
+        Returns bytes moved (0 on a local hit)."""
         size = self.global_tier.size(key)
         r = self.replica(key, size)
+        moved = 0
         r.lock.acquire_write()
         try:
             if chunk_idx not in r.present_chunks:
@@ -103,16 +108,19 @@ class LocalTier:
                 r.present_chunks.add(chunk_idx)
                 if len(r.present_chunks) == self.global_tier.n_chunks(key):
                     r.full = True
+                moved = length
         finally:
             r.lock.release_write()
-        return r
+        return moved
 
-    def pull_range(self, key: str, offset: int, length: int) -> Replica:
-        """Pull exactly the chunks covering [offset, offset+length)."""
+    def pull_range(self, key: str, offset: int, length: int) -> int:
+        """Pull exactly the chunks covering [offset, offset+length).
+        Returns bytes moved."""
         cs = self.global_tier.chunk_size
+        moved = 0
         for idx in range(offset // cs, (offset + max(length, 1) - 1) // cs + 1):
-            self.pull_chunk(key, idx)
-        return self._replicas[key]
+            moved += self.pull_chunk(key, idx)
+        return moved
 
     def push(self, key: str) -> int:
         """Write the full local replica to the global tier.  Returns bytes."""

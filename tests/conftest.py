@@ -8,6 +8,16 @@ import numpy as np
 import pytest
 
 
+def pytest_collection_modifyitems(config, items):
+    """Mark the interpret-mode kernel matrix (and the hypothesis kernel
+    sweeps) ``slow`` so scripts/tier1.sh can keep the default gate fast;
+    plain ``pytest`` still runs everything."""
+    for item in items:
+        if "pallas_interpret" in item.nodeid or \
+                "test_kernels_property" in item.nodeid:
+            item.add_marker(pytest.mark.slow)
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,315 @@
+"""Event-driven dispatch: batch invocation, completion latches, latency
+regression (no polling floor), and the lock-striped global tier under
+concurrent multi-key access."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import CompletionLatch, FaasmRuntime, FunctionDef
+from repro.state.kv import GlobalTier
+from repro.state.local import LocalTier
+
+
+def _echo(api):
+    api.write_call_output(b"echo:" + api.read_call_input())
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# invoke_many / wait_all
+# ---------------------------------------------------------------------------
+
+def test_invoke_many_results_ordered():
+    rt = FaasmRuntime(n_hosts=2, capacity=4)
+    try:
+        def sq(api):
+            i = int.from_bytes(api.read_call_input(), "little")
+            api.write_call_output((i * i).to_bytes(4, "little"))
+            return 0
+
+        rt.upload(FunctionDef("sq", sq))
+        cids = rt.invoke_many("sq", [i.to_bytes(2, "little")
+                                     for i in range(32)])
+        assert len(cids) == 32
+        rcs = rt.wait_all(cids, timeout=30)
+        assert rcs == [0] * 32
+        outs = [int.from_bytes(rt.output(c), "little") for c in cids]
+        assert outs == [i * i for i in range(32)]    # IDs follow input order
+    finally:
+        rt.shutdown()
+
+
+def test_wait_all_isolates_per_call_failures():
+    rt = FaasmRuntime(n_hosts=2, capacity=4)
+    try:
+        def flaky(api):
+            i = int.from_bytes(api.read_call_input(), "little")
+            if i % 3 == 0:
+                raise RuntimeError(f"boom {i}")
+            api.write_call_output(bytes([i]))
+            return 0
+
+        rt.upload(FunctionDef("flaky", flaky))
+        cids = rt.invoke_many("flaky", [i.to_bytes(1, "little")
+                                        for i in range(12)])
+        rcs = rt.wait_all(cids, timeout=30)
+        for i, (cid, rc) in enumerate(zip(cids, rcs)):
+            if i % 3 == 0:
+                assert rc != 0
+                assert "boom" in rt.call(cid).error
+            else:
+                assert rc == 0
+                assert rt.output(cid) == bytes([i])
+    finally:
+        rt.shutdown()
+
+
+def test_wait_all_empty_and_timeout():
+    rt = FaasmRuntime(n_hosts=1)
+    try:
+        assert rt.wait_all([], timeout=1) == []
+
+        def slow(api):
+            time.sleep(2.0)
+            return 0
+
+        rt.upload(FunctionDef("slow", slow))
+        cids = rt.invoke_many("slow", [b""])
+        with pytest.raises(TimeoutError):
+            rt.wait_all(cids, timeout=0.05)
+        assert rt.wait_all(cids, timeout=30) == [0]
+    finally:
+        rt.shutdown()
+
+
+def test_chain_call_many_from_inside_a_faaslet():
+    rt = FaasmRuntime(n_hosts=2, capacity=8)
+    try:
+        def worker(api):
+            i = int.from_bytes(api.read_call_input(), "little")
+            api.write_call_output((2 * i).to_bytes(4, "little"))
+            return 0
+
+        def fanout(api):
+            cids = api.chain_call_many(
+                "worker", [i.to_bytes(2, "little") for i in range(16)])
+            rcs = api.await_all(cids)
+            assert rcs == [0] * 16
+            total = sum(int.from_bytes(api.get_call_output(c), "little")
+                        for c in cids)
+            api.write_call_output(total.to_bytes(4, "little"))
+            return 0
+
+        rt.upload(FunctionDef("worker", worker))
+        rt.upload(FunctionDef("fanout", fanout))
+        cid = rt.invoke("fanout")
+        assert rt.wait(cid, timeout=30) == 0, rt.call(cid).error
+        assert int.from_bytes(rt.output(cid), "little") == \
+            sum(2 * i for i in range(16))
+    finally:
+        rt.shutdown()
+
+
+def test_completion_latch_counts_down_once_per_call():
+    latch = CompletionLatch(3)
+    assert not latch.wait(0)
+    latch.count_down()
+    latch.count_down()
+    assert not latch.wait(0)
+    latch.count_down()
+    assert latch.wait(0)
+    assert CompletionLatch(0).wait(0)                # empty batch: already open
+
+
+# ---------------------------------------------------------------------------
+# event-driven latency: no 50 ms polling floor
+# ---------------------------------------------------------------------------
+
+def test_warm_invoke_latency_has_no_polling_floor():
+    rt = FaasmRuntime(n_hosts=1, capacity=2)
+    try:
+        def noop(api):
+            return 0
+
+        rt.upload(FunctionDef("noop", noop))
+        rt.wait(rt.invoke("noop"), timeout=10)       # warm the Faaslet
+        # the old sleep-poll wait() floored every call at ~50 ms, so every
+        # round would fail; a loaded CI box can produce one outlier round,
+        # hence best-of-3 (a real polling floor shows up in all of them)
+        best_p99 = float("inf")
+        for _ in range(3):
+            lats = []
+            for _ in range(50):
+                t0 = time.perf_counter()
+                cid = rt.invoke("noop")
+                assert rt.wait(cid, timeout=10) == 0
+                lats.append(time.perf_counter() - t0)
+            p99_ms = float(np.percentile(np.asarray(lats), 99)) * 1e3
+            best_p99 = min(best_p99, p99_ms)
+            if best_p99 < 25.0:
+                break
+        assert best_p99 < 25.0, \
+            f"p99 {best_p99:.2f}ms suggests a polling floor"
+    finally:
+        rt.shutdown()
+
+
+def test_straggler_speculation_fires_from_monitor_without_waiter():
+    """The twin is spawned by the background monitor even when nobody has
+    called wait() yet."""
+    rt = FaasmRuntime(n_hosts=2, straggler_timeout=0.2)
+    try:
+        seen = {"n": 0}
+
+        def sometimes_slow(api):
+            seen["n"] += 1
+            if seen["n"] == 1:
+                time.sleep(3.0)
+            api.write_call_output(b"ok")
+            return 0
+
+        rt.upload(FunctionDef("s", sometimes_slow))
+        cid = rt.invoke("s")
+        time.sleep(0.8)                              # no waiter during this
+        call = rt.call(cid)
+        assert call.twin_id is not None
+        assert rt.wait(cid, timeout=10) == 0
+        assert rt.output(cid) == b"ok"
+    finally:
+        rt.shutdown()
+
+
+def test_heartbeat_monitor_fails_silent_host_and_requeues():
+    """With heartbeat_timeout set (opt-in), the background monitor declares a
+    silent host dead and re-executes its in-flight calls elsewhere."""
+    rt = FaasmRuntime(n_hosts=2, heartbeat_timeout=0.3)
+    try:
+        state = {"n": 0}
+
+        def stall_once(api):
+            state["n"] += 1
+            if state["n"] == 1:
+                time.sleep(2.5)                  # no beat while stalled
+            api.write_call_output(b"ok")
+            return 0
+
+        rt.upload(FunctionDef("stall", stall_once))
+        cid = rt.invoke("stall")
+        assert rt.wait(cid, timeout=30) == 0
+        assert rt.call(cid).attempts == 2        # heartbeat kill + re-execute
+        assert rt.output(cid) == b"ok"
+        assert len(rt.alive_hosts()) == 1
+    finally:
+        rt.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# lock-striped GlobalTier
+# ---------------------------------------------------------------------------
+
+def test_global_tier_semantics_preserved():
+    gt = GlobalTier(chunk_size=8)
+    gt.set("k", bytes(range(32)), host="h")
+    assert gt.n_chunks("k") == 4
+    assert gt.get_range("k", 8, 8, host="h") == bytes(range(8, 16))
+    gt.set_range("k", 30, b"\xff\xff\xff", host="h")   # extends the value
+    assert gt.size("k") == 33
+    with pytest.raises(IndexError):
+        gt.get_range("k", 30, 10)
+    gt.append("k", b"xy", host="h")
+    assert gt.size("k") == 35
+    assert gt.version("k") >= 3
+    gt.delete("k")
+    assert not gt.exists("k")
+    assert gt.version("k") == 0
+
+
+def test_global_tier_transfer_metrics_across_stripes():
+    gt = GlobalTier(chunk_size=8)
+    for i in range(20):                              # keys land on many stripes
+        gt.set(f"key{i}", bytes(16), host="h0")
+    assert gt.bytes_pushed["h0"] == 20 * 16
+    for i in range(20):
+        gt.get(f"key{i}", host="h1")
+    assert gt.bytes_pulled["h1"] == 20 * 16
+    assert gt.total_transfer() == 2 * 20 * 16
+    gt.reset_metrics()
+    assert gt.total_transfer() == 0
+
+
+def test_concurrent_multi_key_access_under_striped_locks():
+    gt = GlobalTier(chunk_size=64, n_stripes=16)
+    n_threads, n_iters, size = 8, 200, 256
+    for t in range(n_threads):
+        gt.set(f"k{t}", bytes(size), host="init")
+    errors = []
+
+    def hammer(t):
+        key = f"k{t}"
+        try:
+            for i in range(n_iters):
+                payload = bytes([i % 256]) * 64
+                gt.set_range(key, (i % 4) * 64, payload, host=f"h{t}")
+                back = gt.get_range(key, (i % 4) * 64, 64, host=f"h{t}")
+                assert back == payload
+        except Exception as e:                       # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=60)
+    assert not errors
+    for t in range(n_threads):
+        assert gt.size(f"k{t}") == size
+        # every thread's final writes landed intact
+        last = (n_iters - 1) % 256
+        assert gt.get_range(f"k{t}", ((n_iters - 1) % 4) * 64, 64,
+                            host="check") == bytes([last]) * 64
+
+
+def test_local_tier_chunk_transfers_do_not_cross_keys():
+    """pull_chunk / push_dirty ride on get_range/set_range per key; bytes are
+    attributed exactly, chunk-granular, per host."""
+    gt = GlobalTier(chunk_size=8)
+    gt.set("a", bytes(range(64)), host="up")
+    gt.set("b", bytes(64), host="up")
+    lt = LocalTier("h0", gt)
+    gt.reset_metrics()
+    lt.pull_range("a", 20, 4)                        # chunk 2 of "a" only
+    assert gt.bytes_pulled["h0"] == 8
+    lt.pull("b")
+    r = lt.replica("b")
+    r.buf[9] = 42
+    lt.mark_dirty("b", 9, 1)
+    moved = lt.push_dirty("b")
+    assert moved == 8                                # one chunk of "b"
+    assert gt.get("b", host="x")[9] == 42
+    assert bytes(lt.replica("a").buf[20:24]) == bytes(range(20, 24))
+
+
+def test_concurrent_runtime_calls_on_distinct_state_keys():
+    """End-to-end: parallel Faaslets writing different keys through the host
+    interface never corrupt each other under the striped tier."""
+    rt = FaasmRuntime(n_hosts=2, capacity=8, chunk_size=64)
+    try:
+        def writer(api):
+            i = int.from_bytes(api.read_call_input(), "little")
+            key = f"slot{i}"
+            api.set_state(key, bytes([i]) * 128)
+            api.push_state(key)
+            return 0
+
+        rt.upload(FunctionDef("writer", writer))
+        cids = rt.invoke_many("writer", [i.to_bytes(1, "little")
+                                         for i in range(16)])
+        assert rt.wait_all(cids, timeout=30) == [0] * 16
+        for i in range(16):
+            assert rt.global_tier.get(f"slot{i}", host="check") == \
+                bytes([i]) * 128
+    finally:
+        rt.shutdown()

@@ -1,6 +1,8 @@
 """Faaslet SFI invariants: bounds checking, shared regions, resource budgets."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.faaslet import (Faaslet, FaasletMemoryFault,

@@ -1,6 +1,9 @@
 """Hypothesis property tests on kernel invariants."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention import flash_attention, attention_ref

@@ -3,6 +3,8 @@ import threading
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.state.kv import GlobalTier, RWLock
