@@ -1,8 +1,32 @@
-"""Paper Tab. 3 + Fig. 10: cold-start footprint and churn.
+"""Paper Tab. 3 + Fig. 10: cold-start footprint and churn — plus copy
+accounting for the O(dirty) restore/reset and zero-copy state data plane.
 
 Measures initialisation latency and memory footprint of Faaslets vs
 Proto-Faaslet restore vs the container-sim baseline, and sustained cold-start
-churn (instances created per second)."""
+churn (instances created per second).
+
+Copy accounting (``state_copy/*`` rows, also written to ``BENCH_state.json``):
+
+  * ``reset_dirty_us``    — §5.2 post-call reset of a 16 MB-arena Faaslet with
+                            one dirty page via ``reset_from_base`` (re-stamps
+                            only dirty pages from the shared CoW base).
+  * ``reset_full_us``     — the pre-CoW baseline: ``restore_arena`` memcpying
+                            the whole snapshot back.  The ratio is the
+                            O(dirty)-vs-O(arena) headline; it should be ≥ 10x
+                            and grows linearly with arena size.
+  * ``restore_cow_us``    — stamping out a fresh Faaslet by binding the base
+                            MAP_PRIVATE (O(1) in arena size) vs
+                            ``restore_copy_us`` paying the full memcpy +
+                            ``pickle.loads``.
+  * ``pull_push_copies``  — ``GlobalTier.total_copied()`` for a pull +
+                            HOGWILD ``push_delta`` of a 4 MB key.  The
+                            zero-copy plane (``readinto`` + in-place
+                            ``add_inplace``) moves the value **once** end to
+                            end; the old bytes-typed path copied it ≥ 2x per
+                            direction (get→bytes→frombuffer→assign on pull;
+                            get+copy+add+set under the write lock on push).
+"""
+import json
 import time
 
 import numpy as np
@@ -10,11 +34,114 @@ import numpy as np
 from benchmarks.common import emit
 from repro.core import (CONTAINER_OVERHEAD_BYTES, FAASLET_OVERHEAD_BYTES,
                         Faaslet, ProtoFaaslet)
+from repro.core.faaslet import WASM_PAGE
+from repro.state.kv import GlobalTier
+from repro.state.local import LocalTier
 
 
 def _noop_init(f: Faaslet):
     f.brk(64 * 1024)
     f.write(0, b"x" * 1024)
+
+
+def _time_us(fn, n: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def _bench_cow_reset() -> dict:
+    """16 MB arena, one dirty page per call: O(dirty) vs O(arena) reset."""
+    arena_mb = 16
+    limit = arena_mb * (1 << 20)
+    f = Faaslet("bench-cow", "h0", memory_limit=limit)
+    f.brk(limit)
+    f.write(0, bytes(range(256)) * 16)            # non-trivial snapshot content
+    proto = ProtoFaaslet.capture(f, {"weights": list(range(8))})
+
+    cow, _ = proto.restore("h0")                  # builds the shared base once
+    n = 50
+
+    def dirty_reset():
+        cow.write(3 * WASM_PAGE + 17, b"scratch")   # 1 dirty page
+        cow.reset_from_base()
+    reset_dirty_us = _time_us(dirty_reset, n)
+
+    full, _ = proto.restore_copy("h0")
+
+    def full_reset():
+        full.write(3 * WASM_PAGE + 17, b"scratch")
+        full.restore_arena(proto.arena, proto.brk)
+    reset_full_us = _time_us(full_reset, n)
+
+    restore_cow_us = _time_us(lambda: proto.restore("h0"), 20)
+    restore_copy_us = _time_us(lambda: proto.restore_copy("h0"), 20)
+
+    return {
+        "arena_mb": arena_mb,
+        "dirty_pages_per_call": 1,
+        "reset_dirty_us": reset_dirty_us,
+        "reset_full_us": reset_full_us,
+        "reset_speedup": reset_full_us / max(reset_dirty_us, 1e-9),
+        "restore_cow_us": restore_cow_us,
+        "restore_copy_us": restore_copy_us,
+        "restore_speedup": restore_copy_us / max(restore_cow_us, 1e-9),
+    }
+
+
+def _bench_state_copies() -> dict:
+    """Copy count for pull + push_delta of a 4 MB key: new zero-copy plane
+    vs an emulation of the old bytes-typed path."""
+    size = 4 << 20
+    val = np.zeros(size // 4, np.float32)
+
+    # -- new plane: readinto pull + in-place delta push ----------------------
+    gt = GlobalTier()
+    gt.set("w", val.tobytes(), host="up")
+    lt = LocalTier("h0", gt)
+    gt.reset_metrics()
+    t0 = time.perf_counter()
+    lt.pull("w")
+    lt.snapshot_base("w")
+    lt.replica("w").buf.view(np.float32)[123] += 1.0
+    lt.push_delta("w")
+    new_us = (time.perf_counter() - t0) * 1e6
+    new_copied = gt.total_copied()
+
+    # -- old path emulation: every transfer round-trips through bytes --------
+    gt2 = GlobalTier()
+    gt2.set("w", val.tobytes(), host="up")
+    gt2.reset_metrics()
+    extra = 0                                     # local-side copies the old
+    t0 = time.perf_counter()                      # LocalTier performed
+    buf = np.zeros(size, np.uint8)
+    data = gt2.get("w", host="h0")                # tier copy (store -> bytes)
+    buf[:] = np.frombuffer(data, np.uint8)        # local copy (bytes -> replica)
+    extra += size
+    base = buf.copy()                             # snapshot_base full copy
+    extra += size
+    buf.view(np.float32)[123] += 1.0
+    local = buf.view(np.float32).copy()           # push_delta staging copy
+    extra += size
+    delta = local - base.view(np.float32)
+    cur = np.frombuffer(gt2.get("w", host="h0"), np.float32).copy()  # tier+local
+    extra += size
+    cur[:delta.size] += delta
+    gt2.set("w", cur.tobytes(), host="h0")        # tobytes + tier ingest copy
+    extra += size
+    old_us = (time.perf_counter() - t0) * 1e6
+    old_copied = gt2.total_copied() + extra
+
+    return {
+        "value_mb": size >> 20,
+        "new_bytes_copied": new_copied,
+        "new_full_value_copies": new_copied / size,
+        "new_wall_us": new_us,
+        "old_bytes_copied": old_copied,
+        "old_full_value_copies": old_copied / size,
+        "old_wall_us": old_us,
+    }
 
 
 def main() -> None:
@@ -29,6 +156,7 @@ def main() -> None:
     f = Faaslet("bench", "h0")
     _noop_init(f)
     proto = ProtoFaaslet.capture(f)
+    proto.restore("h0")                            # decode the base once
     t0 = time.perf_counter()
     for _ in range(n):
         proto.restore("h0")
@@ -70,6 +198,28 @@ def main() -> None:
         _noop_init(g)
         count += 1
     emit("fig10_churn/fresh_per_s", 1e6 / count, f"{count} inits/s")
+
+    # --- copy accounting: O(dirty) reset + zero-copy state plane -----------------
+    cow = _bench_cow_reset()
+    emit("state_copy/reset_dirty_us", cow["reset_dirty_us"],
+         f"{cow['arena_mb']}MB arena, 1 dirty page")
+    emit("state_copy/reset_full_us", cow["reset_full_us"],
+         f"{cow['reset_speedup']:.1f}x slower than dirty reset")
+    emit("state_copy/restore_cow_us", cow["restore_cow_us"],
+         f"{cow['restore_speedup']:.1f}x faster than full-copy restore")
+
+    st = _bench_state_copies()
+    emit("state_copy/pull_push_delta_copies", st["new_full_value_copies"],
+         f"{st['value_mb']}MB key; old path {st['old_full_value_copies']:.1f} copies")
+    emit("state_copy/pull_push_delta_us", st["new_wall_us"],
+         f"old path {st['old_wall_us']:.0f}us")
+
+    results = {"cow_reset": cow, "state_plane": st}
+    with open("BENCH_state.json", "w") as fh:
+        json.dump(results, fh, indent=2)
+    print(f"# copy accounting written to BENCH_state.json: "
+          f"reset {cow['reset_speedup']:.1f}x, "
+          f"pull+push_delta {st['new_full_value_copies']:.2f} full-value copies")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Fail fast when the installed JAX is outside the range supported by
+``repro.kernels.common.tpu_compiler_params``.
+
+The Pallas TPU compiler-params class has been renamed across JAX releases
+(``TPUCompilerParams`` -> ``CompilerParams``); ``tpu_compiler_params``
+resolves whichever exists at call time and silently returns ``None`` when it
+can't.  That silence is fine inside a kernel call (defaults apply) but means
+the *next* rename only surfaces as a slow drift in kernel behaviour.  This
+check — run from ``scripts/tier1.sh`` — turns it into a loud, actionable
+failure:
+
+  * JAX older/newer than the explicitly supported range  -> exit 1
+  * pltpu importable but neither params class resolvable -> exit 1
+
+Invoked standalone:  python scripts/check_jax_pin.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+
+# The range tpu_compiler_params is known to resolve against (ROADMAP
+# "Kernel API pinning").  Bump MAX when a new JAX release is verified.
+SUPPORTED_MIN = (0, 4, 26)
+SUPPORTED_MAX_EXCLUSIVE = (0, 8, 0)
+
+
+def _parse(version: str):
+    nums = re.findall(r"\d+", version)[:3]
+    if not nums:
+        return None
+    return tuple(int(n) for n in (nums + ["0", "0"])[:3])
+
+
+def main() -> int:
+    try:
+        import jax
+    except ImportError as e:
+        print(f"check_jax_pin: jax not importable ({e}); kernels will fall "
+              "back to XLA — skipping pin check")
+        return 0
+
+    ver = _parse(jax.__version__)
+    if ver is None:
+        print(f"check_jax_pin: FAIL — cannot parse jax version "
+              f"{jax.__version__!r}")
+        return 1
+    if not (SUPPORTED_MIN <= ver < SUPPORTED_MAX_EXCLUSIVE):
+        lo = ".".join(map(str, SUPPORTED_MIN))
+        hi = ".".join(map(str, SUPPORTED_MAX_EXCLUSIVE))
+        print(f"check_jax_pin: FAIL — jax {jax.__version__} outside the "
+              f"supported range [{lo}, {hi}) for tpu_compiler_params.\n"
+              f"  Verify pltpu.CompilerParams/TPUCompilerParams still "
+              f"resolve in src/repro/kernels/common.py, run the slow kernel "
+              f"matrix (pytest -m slow), then bump the pin here.")
+        return 1
+
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except ImportError as e:
+        print(f"check_jax_pin: pallas TPU backend not importable ({e}); "
+              "interpret-mode tests cover the kernels — OK")
+        return 0
+
+    cls = getattr(pltpu, "CompilerParams", None) or \
+        getattr(pltpu, "TPUCompilerParams", None)
+    if cls is None:
+        print("check_jax_pin: FAIL — jax.experimental.pallas.tpu exposes "
+              "neither CompilerParams nor TPUCompilerParams (another "
+              "rename?).  Update tpu_compiler_params() in "
+              "src/repro/kernels/common.py and this pin.")
+        return 1
+
+    print(f"check_jax_pin: OK — jax {jax.__version__}, params class "
+          f"pltpu.{cls.__name__}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

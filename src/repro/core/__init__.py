@@ -1,8 +1,8 @@
 """FAASM core: Faaslets, host interface, Proto-Faaslets, scheduler, runtime."""
 from repro.core.faaslet import (CONTAINER_OVERHEAD_BYTES,
-                                FAASLET_OVERHEAD_BYTES, Faaslet,
+                                FAASLET_OVERHEAD_BYTES, ArenaBase, Faaslet,
                                 FaasletMemoryFault, ResourceLimitExceeded)
-from repro.core.host_interface import FaasmAPI, StateKeyError
+from repro.core.host_interface import CallCancelled, FaasmAPI, StateKeyError
 from repro.core.proto import ExecutableCache, ProtoFaaslet
 from repro.core.runtime import (Call, CompletionLatch, FaasmRuntime,
                                 FunctionDef, Host)
@@ -11,7 +11,8 @@ from repro.core.chain import await_all, chain, outputs
 from repro.core.vfs import VirtualFS
 
 __all__ = [
-    "Faaslet", "FaasletMemoryFault", "ResourceLimitExceeded", "FaasmAPI",
+    "ArenaBase", "Faaslet", "FaasletMemoryFault", "ResourceLimitExceeded",
+    "FaasmAPI", "CallCancelled",
     "StateKeyError", "ExecutableCache", "ProtoFaaslet", "Call",
     "CompletionLatch", "FaasmRuntime",
     "FunctionDef", "Host", "LocalScheduler", "await_all", "chain", "outputs",

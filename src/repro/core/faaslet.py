@@ -13,14 +13,22 @@ A Faaslet owns
     sharing (Fig. 2).
   * **resource budgets** — the cgroup/traffic-shaping analogue: CPU-time and
     network-byte accounting with hard caps enforced at the host interface.
+
+Restore/reset cost (§5.2) is proportional to what *changed*, not to arena
+size: a Faaslet tracks dirty WASM pages (``write``/``brk`` mark them), a
+Proto-Faaslet snapshot is bound as a shared read-only :class:`ArenaBase`
+(mapped copy-on-write, no per-restore arena copy), and the post-call reset
+re-stamps only the dirty pages from that base.
 """
 from __future__ import annotations
 
 import itertools
+import mmap
+import os
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -30,9 +38,74 @@ CONTAINER_OVERHEAD_BYTES = 8 * (1 << 20)  # paper §6.2: ~8 MB per container
 
 _ids = itertools.count()
 
+# Snapshots at or below this size restore by eager copy: a µs-scale memcpy
+# beats an mmap syscall for tiny arenas, and the dirty-page reset on top is
+# O(dirty) either way.  Larger snapshots map the base MAP_PRIVATE so restore
+# stays O(1) and clean pages are shared across Faaslets.
+EAGER_COPY_MAX_BYTES = 1 << 20
+
 
 class FaasletMemoryFault(Exception):
     """Out-of-bounds access trapped by the SFI layer."""
+
+
+class ArenaBase:
+    """Shared read-only arena snapshot backing copy-on-write restores (§5.2).
+
+    The snapshot bytes are written once into an anonymous memfd sized to the
+    Faaslet's full memory limit (the tail beyond the snapshot is a file hole
+    that reads as zeros, which covers pages later exposed by ``brk``).  Every
+    restore maps the fd ``MAP_PRIVATE``: the mapping itself is O(1), clean
+    pages are shared by all Faaslets stamped from this base, and the kernel
+    copies a page only when it is first written.  Where memfd/mmap are
+    unavailable the restore falls back to one eager copy — the software
+    dirty-page reset on top stays O(dirty) either way.
+    """
+
+    def __init__(self, snapshot: bytes, memory_limit: int):
+        self.snapshot = snapshot
+        self.view = np.frombuffer(snapshot, np.uint8)       # zero-copy, RO
+        pages = max(1, -(-max(memory_limit, len(snapshot)) // WASM_PAGE))
+        self.span = pages * WASM_PAGE
+        self._fd = -1
+        if len(snapshot) <= EAGER_COPY_MAX_BYTES:
+            return                          # small snapshot: eager-copy restores
+        try:
+            fd = os.memfd_create("faaslet-arena-base")
+            os.truncate(fd, self.span)
+            os.pwrite(fd, snapshot, 0)
+            self._fd = fd
+        except (AttributeError, OSError):
+            self._fd = -1
+
+    def __del__(self):
+        if getattr(self, "_fd", -1) >= 0:
+            try:
+                os.close(self._fd)
+            except OSError:
+                pass
+
+    def map_private(self) -> Tuple[np.ndarray, Optional[mmap.mmap]]:
+        """A writable CoW view of the base (plus the mapping keeping it alive)."""
+        if self._fd >= 0:
+            try:
+                mm = mmap.mmap(self._fd, self.span, flags=mmap.MAP_PRIVATE,
+                               prot=mmap.PROT_READ | mmap.PROT_WRITE)
+                return np.frombuffer(mm, np.uint8), mm
+            except (OSError, ValueError):
+                pass
+        pages = -(-self.view.size // WASM_PAGE)
+        arena = np.zeros(pages * WASM_PAGE, np.uint8)
+        arena[:self.view.size] = self.view
+        return arena, None
+
+    def stamp(self, dest: np.ndarray, lo: int, hi: int) -> None:
+        """Overwrite ``dest[lo:hi]`` with the base content of that range."""
+        cut = min(hi, self.view.size)
+        if lo < cut:
+            dest[lo:cut] = self.view[lo:cut]
+        if max(lo, cut) < hi:
+            dest[max(lo, cut):hi] = 0
 
 
 class ResourceLimitExceeded(Exception):
@@ -83,6 +156,10 @@ class Faaslet:
         self.memory_limit = memory_limit
         self._arena = np.zeros(initial_pages * WASM_PAGE, np.uint8)
         self._brk = 0
+        self._base: Optional[ArenaBase] = None   # CoW base (set by bind_base)
+        self._base_brk = 0
+        self._mm: Optional[mmap.mmap] = None     # keeps the private mapping alive
+        self._dirty: Set[int] = set()            # page indices written since reset
         self._regions: List[SharedRegion] = []
         self._region_top = memory_limit            # shared regions map above it
         self.usage = ResourceUsage(cpu_budget_ns=cpu_budget_ns,
@@ -108,6 +185,8 @@ class Faaslet:
                 grown = np.zeros(pages * WASM_PAGE, np.uint8)
                 grown[:self._arena.size] = self._arena
                 self._arena = grown
+            if new_brk > self._brk:
+                self._mark_dirty(self._brk, new_brk - self._brk)
             self._brk = new_brk
             return self._brk
 
@@ -119,6 +198,64 @@ class Faaslet:
     def mmap(self, length: int) -> int:
         """Anonymous private mapping == arena grow (the paper's mmap action)."""
         return self.sbrk(-(-length // WASM_PAGE) * WASM_PAGE)
+
+    # -- dirty-page tracking / copy-on-write base (§5.2) -----------------------
+
+    def _mark_dirty(self, addr: int, length: int) -> None:
+        if length > 0:
+            self._dirty.update(range(addr // WASM_PAGE,
+                                     (addr + length - 1) // WASM_PAGE + 1))
+
+    @property
+    def dirty_pages(self) -> Set[int]:
+        """Arena pages written (or newly exposed by brk) since the last reset."""
+        return set(self._dirty)
+
+    def clear_dirty(self) -> None:
+        with self._lock:
+            self._dirty.clear()
+
+    def has_base(self) -> bool:
+        return self._base is not None
+
+    def bind_base(self, base: ArenaBase, brk: int) -> None:
+        """Bind a shared read-only snapshot as this Faaslet's arena (CoW).
+
+        The arena becomes a private mapping of the base: no arena copy is
+        made here; the kernel shares clean pages with every other Faaslet
+        bound to the same base and copies a page on first write.
+        """
+        with self._lock:
+            arena, mm = base.map_private()
+            self._base_brk = min(brk, self.memory_limit)
+            need = -(-self._base_brk // WASM_PAGE) * WASM_PAGE
+            if arena.size < need:               # eager-copied base below brk
+                grown = np.zeros(need, np.uint8)
+                grown[:arena.size] = arena
+                arena = grown
+            self._arena, self._mm = arena, mm
+            self._base = base
+            self._brk = self._base_brk
+            self._dirty.clear()
+
+    def reset_from_base(self) -> int:
+        """§5.2 post-call reset in O(dirty): re-stamp only the dirty pages
+        from the bound base (byte-identical to a full ``restore_arena`` from
+        the same snapshot).  Returns the number of pages re-stamped."""
+        with self._lock:
+            if self._base is None:
+                raise RuntimeError("no ArenaBase bound; use restore_arena")
+            stamped = 0
+            for p in self._dirty:
+                lo = p * WASM_PAGE
+                if lo >= self._arena.size:
+                    continue
+                self._base.stamp(self._arena, lo,
+                                 min(lo + WASM_PAGE, self._arena.size))
+                stamped += 1
+            self._dirty.clear()
+            self._brk = self._base_brk
+            return stamped
 
     # -- shared regions (§3.3) ------------------------------------------------------
 
@@ -161,9 +298,23 @@ class Faaslet:
             f"[0, {self._brk}) and all shared regions")
 
     def read(self, addr: int, length: int) -> np.ndarray:
-        """Zero-copy view of linear memory (trap on out-of-bounds)."""
+        """Zero-copy view of linear memory (trap on out-of-bounds).
+
+        Arena views come back read-only: mutations must go through
+        :meth:`write` so dirty-page tracking sees them (otherwise a warm
+        reset could miss them and leak bytes into the next call).  Shared
+        regions stay writable — that is the §3.3 zero-copy write path —
+        unless the region itself was mapped read-only."""
         buf, off = self._locate(addr, length)
-        return buf[off:off + length]
+        view = buf[off:off + length]
+        if buf is self._arena:
+            view.setflags(write=False)
+        else:
+            for r in self._regions:
+                if r.backing is buf and not r.writable:
+                    view.setflags(write=False)
+                    break
+        return view
 
     def write(self, addr: int, data) -> None:
         data = np.frombuffer(bytes(data), np.uint8) if not isinstance(
@@ -172,20 +323,41 @@ class Faaslet:
         for r in self._regions:
             if r.backing is buf and not r.writable:
                 raise FaasletMemoryFault(f"write to read-only region {r.key!r}")
+        if buf is self._arena:
+            self._mark_dirty(off, len(data))
         buf[off:off + len(data)] = data
 
     # -- introspection ----------------------------------------------------------------
 
     def memory_bytes(self) -> int:
-        """Private footprint (shared regions are counted once per host)."""
+        """Private footprint (shared regions are counted once per host).
+
+        A mmap-CoW Faaslet privately owns only its dirty pages — clean pages
+        belong to the shared base, which :meth:`base_footprint` reports so
+        the host can count it once across all Faaslets bound to it.  An
+        eager-copied arena (small snapshot, or mmap unavailable) is fully
+        private and charged in full."""
+        if self._mm is not None:
+            return len(self._dirty) * WASM_PAGE + FAASLET_OVERHEAD_BYTES
         return self._arena.size + FAASLET_OVERHEAD_BYTES
+
+    def base_footprint(self) -> Optional[Tuple[int, int]]:
+        """(base identity, resident bytes) of the shared CoW base, or None
+        when the arena is a private copy (nothing is actually shared).
+        Hosts deduplicate on the identity: one snapshot, one charge."""
+        if self._mm is None:
+            return None
+        return id(self._base), -(-self._base.view.size // WASM_PAGE) * WASM_PAGE
 
     def snapshot_arena(self) -> bytes:
         with self._lock:
             return self._arena[:self._brk].tobytes()
 
     def restore_arena(self, data: bytes, brk: int) -> None:
+        """Full-copy restore (the pre-CoW baseline, kept for comparison and
+        for restores without a bound :class:`ArenaBase`)."""
         with self._lock:
             self.brk(max(brk, len(data)))
             self._arena[:len(data)] = np.frombuffer(data, np.uint8)
+            self._mark_dirty(0, len(data))
             self._brk = brk

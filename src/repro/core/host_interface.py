@@ -29,6 +29,13 @@ class StateKeyError(KeyError):
     pass
 
 
+class CallCancelled(RuntimeError):
+    """The call's speculative counterpart already settled: this execution is
+    cooperatively cancelled at the next host-interface checkpoint (chain,
+    await, state pull/push) so its executor slot frees instead of running a
+    discarded computation to completion."""
+
+
 class FaasmAPI:
     def __init__(self, faaslet: Faaslet, host, runtime, call):
         self.faaslet = faaslet
@@ -44,6 +51,15 @@ class FaasmAPI:
 
     # ------------------------------------------------------------------ calls --
 
+    def check_cancelled(self) -> None:
+        """Cooperative cancellation point: raise if this call was cancelled
+        (its speculative twin already settled).  Called automatically at
+        chain/await and state pull/push boundaries."""
+        ev = getattr(self.call, "cancel_event", None)
+        if ev is not None and ev.is_set():
+            raise CallCancelled(
+                f"call {self.call.id} cancelled (speculative twin settled)")
+
     def read_call_input(self) -> bytes:
         return self.call.input
 
@@ -51,22 +67,26 @@ class FaasmAPI:
         self.call.output = bytes(out_data)
 
     def chain_call(self, name: str, args: bytes = b"") -> int:
+        self.check_cancelled()
         self.faaslet.usage.charge_net(n_out=len(args))
         return self.runtime.invoke(name, bytes(args), parent=self.call)
 
     def chain_call_many(self, name: str, args_list) -> List[int]:
         """Batch chain: one submission for the whole fan-out (ordered IDs)."""
+        self.check_cancelled()
         args_list = [bytes(a) for a in args_list]
         for a in args_list:
             self.faaslet.usage.charge_net(n_out=len(a))
         return self.runtime.invoke_many(name, args_list, parent=self.call)
 
     def await_call(self, call_id: int, timeout: Optional[float] = None) -> int:
+        self.check_cancelled()
         return self.runtime.wait(call_id, timeout=timeout)
 
     def await_all(self, call_ids,
                   timeout: Optional[float] = None) -> List[int]:
         """Block on one shared latch until every chained call finishes."""
+        self.check_cancelled()
         return self.runtime.wait_all(call_ids, timeout=timeout)
 
     def get_call_output(self, call_id: int) -> bytes:
@@ -140,26 +160,31 @@ class FaasmAPI:
         lt.mark_dirty(key, offset, len(value))
 
     def push_state(self, key: str) -> None:
+        self.check_cancelled()
         n = self._local().push(key)
         self.faaslet.usage.charge_net(n_out=n)
 
     def push_state_partial(self, key: str) -> None:
         """Push only dirty chunks (what VectorAsync.push() uses)."""
+        self.check_cancelled()
         n = self._local().push_dirty(key)
         self.faaslet.usage.charge_net(n_out=n)
 
     def push_state_delta(self, key: str, dtype=np.float32) -> None:
         """Accumulating push: global += local − base (cross-host HOGWILD)."""
+        self.check_cancelled()
         n = self._local().push_delta(key, dtype=dtype)
         self.faaslet.usage.charge_net(n_out=n)
 
     def pull_state(self, key: str, track_delta: bool = False) -> None:
+        self.check_cancelled()
         moved = self._local().pull(key)
         if track_delta:
             self._local().snapshot_base(key)
         self.faaslet.usage.charge_net(n_in=moved)
 
     def pull_state_chunk(self, key: str, chunk_idx: int) -> None:
+        self.check_cancelled()
         moved = self._local().pull_chunk(key, chunk_idx)
         self.faaslet.usage.charge_net(n_in=moved)
 

@@ -15,6 +15,15 @@ Two cold-start costs exist on a TPU serving/training host, both attacked here:
 After every call the runtime *resets* the Faaslet from its Proto-Faaslet
 (§5.2 multi-tenant reset): no information from the previous call survives in
 private memory.
+
+Restore cost is O(1), not O(arena): the snapshot is decoded once per process
+into a shared read-only :class:`~repro.core.faaslet.ArenaBase` that every
+restore maps copy-on-write (``Faaslet.bind_base``), and the pickled
+init-code products are decoded once into a cached template instead of paying
+``pickle.loads`` per restore.  The template is shared read-only across all
+restores on the process — the same discipline as the shared state tier
+(§3.3); functions must not mutate it.  The pre-CoW full-copy path survives
+as :meth:`ProtoFaaslet.restore_copy` (the benchmark baseline).
 """
 from __future__ import annotations
 
@@ -26,7 +35,10 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.core.faaslet import Faaslet
+from repro.core.faaslet import ArenaBase, Faaslet
+
+_cache_lock = threading.Lock()
+_PICKLE_FIELDS = ("func_name", "arena", "brk", "memory_limit", "user_state")
 
 
 @dataclass(frozen=True)
@@ -47,8 +59,47 @@ class ProtoFaaslet:
             user_state=pickle.dumps(user_state) if user_state is not None else b"",
         )
 
+    # -- per-process decoded caches (built once, shared by every restore) ------
+
+    def arena_base(self) -> ArenaBase:
+        """The shared read-only CoW base for this snapshot (decoded once)."""
+        base = self.__dict__.get("_arena_base")
+        if base is None:
+            with _cache_lock:
+                base = self.__dict__.get("_arena_base")
+                if base is None:
+                    base = ArenaBase(self.arena, self.memory_limit)
+                    object.__setattr__(self, "_arena_base", base)
+        return base
+
+    def user_state_template(self) -> Any:
+        """Init-code products decoded once (no per-restore ``pickle.loads``).
+
+        Shared read-only across every Faaslet restored from this proto."""
+        if not self.user_state:
+            return None
+        if "_user_state_tpl" not in self.__dict__:
+            with _cache_lock:
+                if "_user_state_tpl" not in self.__dict__:
+                    object.__setattr__(self, "_user_state_tpl",
+                                       pickle.loads(self.user_state))
+        return self.__dict__["_user_state_tpl"]
+
+    # -- restore ---------------------------------------------------------------
+
     def restore(self, host_id: str) -> Tuple[Faaslet, Any]:
-        """Stamp out a fresh Faaslet from this snapshot (any host)."""
+        """Stamp out a fresh Faaslet from this snapshot (any host).
+
+        O(1) in arena size: binds the shared CoW base instead of copying."""
+        f = Faaslet(self.func_name, host_id, memory_limit=self.memory_limit,
+                    initial_pages=0)
+        f.bind_base(self.arena_base(), self.brk)
+        f.restored_from_proto = True
+        return f, self.user_state_template()
+
+    def restore_copy(self, host_id: str) -> Tuple[Faaslet, Any]:
+        """Full-copy restore: the pre-CoW path (O(arena) memcpy + fresh
+        ``pickle.loads``), kept as the benchmark comparison baseline."""
         f = Faaslet(self.func_name, host_id, memory_limit=self.memory_limit)
         f.restore_arena(self.arena, self.brk)
         f.restored_from_proto = True
@@ -56,6 +107,15 @@ class ProtoFaaslet:
         return f, state
 
     # -- cross-host / global-tier transport -----------------------------------
+
+    def __getstate__(self):
+        # decoded caches (memfd-backed ArenaBase, live template objects) must
+        # not travel with the snapshot bytes
+        return {k: getattr(self, k) for k in _PICKLE_FIELDS}
+
+    def __setstate__(self, state):
+        for k in _PICKLE_FIELDS:
+            object.__setattr__(self, k, state[k])
 
     def serialize(self) -> bytes:
         return pickle.dumps(self)

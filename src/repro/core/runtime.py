@@ -32,7 +32,7 @@ import numpy as np
 
 from repro.core.faaslet import (CONTAINER_OVERHEAD_BYTES,
                                 FAASLET_OVERHEAD_BYTES, Faaslet)
-from repro.core.host_interface import FaasmAPI
+from repro.core.host_interface import CallCancelled, FaasmAPI
 from repro.core.proto import ExecutableCache, ProtoFaaslet
 from repro.core.scheduler import LocalScheduler
 from repro.core.vfs import VirtualFS
@@ -73,6 +73,9 @@ class Call:
     twin_id: Optional[int] = None                # speculative re-execution
     primary_id: Optional[int] = None             # set on twins: who to adopt into
     event: threading.Event = field(default_factory=threading.Event)
+    # cooperative cancel: set when this execution's speculative counterpart
+    # already settled; checked by FaasmAPI at chain/await/state points
+    cancel_event: threading.Event = field(default_factory=threading.Event)
     _cb_lock: threading.Lock = field(default_factory=threading.Lock,
                                      repr=False)
     _callbacks: List[Callable[["Call"], None]] = field(default_factory=list,
@@ -130,6 +133,9 @@ class Host:
         # metrics
         self.cold_starts = 0
         self.warm_hits = 0
+        self.resets = 0                  # §5.2 post-call resets performed
+        self.reset_pages = 0             # dirty pages re-stamped across resets
+        self.cancelled_execs = 0         # speculative losers stopped early
         self.init_seconds: List[float] = []
         self.billable_byte_seconds = 0.0
         self.calls_done = 0
@@ -159,10 +165,14 @@ class Host:
         return self.local_tier
 
     def memory_bytes(self) -> int:
-        """Host resident footprint: shared tier + per-instance overheads."""
+        """Host resident footprint: shared tier + per-instance overheads.
+        CoW bases are charged once per host, not once per Faaslet."""
         with self._mutex:
-            per_inst = sum(f.memory_bytes() for fl in self._warm.values()
-                           for f in fl)
+            warm = [f for fl in self._warm.values() for f in fl]
+            per_inst = sum(f.memory_bytes() for f in warm)
+            bases = dict(fp for fp in (f.base_footprint() for f in warm)
+                         if fp is not None)
+            per_inst += sum(bases.values())
             if self.isolation == "container":
                 per_inst += sum(t.memory_bytes()
                                 for t in self._container_tiers.values())
@@ -233,6 +243,10 @@ class Host:
             rc = int(ret) if ret is not None else 0
             status = "done" if rc == 0 else "failed"
             error = ""
+        except CallCancelled as e:
+            # speculative counterpart already settled: stop quietly and free
+            # the executor slot (the result everyone sees was adopted already)
+            rc, status, error = 1, "cancelled", repr(e)
         except Exception as e:
             rc, status, error = 1, "failed", repr(e)
         t_end = time.perf_counter()
@@ -249,11 +263,28 @@ class Host:
         with self._mutex:
             self.billable_byte_seconds += dur * priv
             self.calls_done += 1
+            if status == "cancelled":
+                self.cancelled_execs += 1
 
-        # §5.2: reset from Proto-Faaslet so no private data leaks across calls
+        # failed call in container mode: drop the private tier (and any
+        # half-written replica) so a retry re-pulls clean state
+        if self.isolation == "container" and status != "done":
+            with self._mutex:
+                self._container_tiers.pop(faaslet.id, None)
+
+        # §5.2: reset from Proto-Faaslet so no private data leaks across
+        # calls — O(dirty pages) when the Faaslet carries a CoW base
         proto = rt.proto_for(call.fn, host=self.id, transfer=False)
         if proto is not None and self.isolation == "faaslet":
-            faaslet.restore_arena(proto.arena, proto.brk)
+            if faaslet.has_base():
+                pages = faaslet.reset_from_base()
+            else:
+                faaslet.restore_arena(proto.arena, proto.brk)
+                pages = len(faaslet.dirty_pages)
+                faaslet.clear_dirty()
+            with self._mutex:
+                self.resets += 1
+                self.reset_pages += pages
         with self._mutex:
             if self.alive:
                 self._warm[call.fn].append(faaslet)
@@ -539,9 +570,18 @@ class FaasmRuntime:
                 c.error = error
             c.t_end = t_end if t_end is not None else time.perf_counter()
 
-        call._settle(mutate)
+        first = call._settle(mutate)
         with self._mutex:
             self._active.discard(call.id)
+        # speculation cleanup: the first 'done' of a speculative pair cancels
+        # the counterpart, so the straggler stops at its next host-interface
+        # checkpoint instead of running to completion in an executor slot
+        if first and call.status == "done":
+            other_id = call.twin_id if call.twin_id is not None \
+                else call.primary_id
+            other = self._calls.get(other_id) if other_id is not None else None
+            if other is not None:
+                other.cancel_event.set()
         if call.primary_id is not None and call.status == "done":
             primary = self._calls.get(call.primary_id)
             if primary is not None:
@@ -698,6 +738,8 @@ class FaasmRuntime:
             "warm_hits": sum(h.warm_hits for h in self.hosts.values()),
             "init_mean_ms": 1e3 * float(np.mean(inits)) if inits else 0.0,
             "init_p99_ms": 1e3 * float(np.percentile(inits, 99)) if inits else 0.0,
+            "resets": sum(h.resets for h in self.hosts.values()),
+            "reset_pages": sum(h.reset_pages for h in self.hosts.values()),
         }
 
     def shutdown(self) -> None:

@@ -2,8 +2,15 @@
 
 Every host runs a *local scheduler*.  The set of warm hosts per function is
 **shared state living in the global tier** (key ``sched/warm/<fn>``); each
-scheduler reads and atomically updates it under the key's global lock while
-making a placement decision — the Omega optimistic-concurrency pattern.
+scheduler reads and updates it while making a placement decision — the Omega
+optimistic-concurrency pattern.
+
+The warm set is a **delta-record log**: registration appends one ``+host``
+record and deregistration one ``-host`` record via the tier's atomic
+``append`` (stripe-lock only — no global key lock, no whole-list JSON
+rewrite on the registration path).  Readers replay the log, and compact it
+back to one record per member (under the tier's atomic ``rewrite``) once the
+log outgrows the membership.
 
 Placement policy (paper §5.1): execute locally if warm with capacity; else
 share with a warm host; else cold-start locally and register warm.  The
@@ -12,10 +19,30 @@ mitigation.
 """
 from __future__ import annotations
 
-import json
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 WARM_PREFIX = "sched/warm/"
+_COMPACT_SLACK = 8          # compact when records exceed membership by this
+
+
+def _replay(raw: bytes) -> Tuple[List[str], int]:
+    """Replay a delta-record log; returns (sorted members, record count)."""
+    members = {}
+    n = 0
+    for rec in raw.decode().split("\n"):
+        if not rec:
+            continue
+        n += 1
+        op, host = rec[0], rec[1:]
+        if op == "+":
+            members[host] = True
+        elif op == "-":
+            members.pop(host, None)
+    return sorted(members), n
+
+
+def _encode(hosts: List[str]) -> bytes:
+    return "".join(f"+{h}\n" for h in hosts).encode()
 
 
 class LocalScheduler:
@@ -23,7 +50,7 @@ class LocalScheduler:
         self.host = host
         self.runtime = runtime
         # warm-set read cache, invalidated by the key's write version in the
-        # global tier — placement on the hot path skips the JSON re-parse
+        # global tier — placement on the hot path skips the log replay
         # unless some scheduler actually changed the set.
         self._warm_cache = {}                   # fn -> (version, hosts)
 
@@ -42,41 +69,32 @@ class LocalScheduler:
         if not gt.exists(key):
             hosts: List[str] = []
         else:
-            try:
-                hosts = json.loads(gt.get(key, host=self.host.id).decode())
-            except Exception:
-                hosts = []
+            hosts, n_records = _replay(gt.get(key, host=self.host.id))
+            if n_records > len(hosts) + _COMPACT_SLACK:
+                # the log outgrew the membership: compact it atomically.
+                # Cache against the version rewrite itself stamped — an
+                # append racing in right after must invalidate this cache.
+                raw, ver = gt.rewrite(
+                    key, lambda cur: _encode(_replay(cur)[0]),
+                    host=self.host.id)
+                hosts, _ = _replay(raw)
         self._warm_cache[fn] = (ver, hosts)
         return hosts
 
     def register_warm(self, fn: str) -> None:
+        if self.host.id in self.warm_hosts(fn):
+            return                              # already a member: no record
         gt = self.runtime.global_tier
-        key = self._warm_key(fn)
-        lock = gt.lock(key)
-        lock.acquire_write()
-        try:
-            hosts = set()
-            if gt.exists(key):
-                hosts = set(json.loads(gt.get(key, host=self.host.id).decode()))
-            hosts.add(self.host.id)
-            gt.set(key, json.dumps(sorted(hosts)).encode(), host=self.host.id)
-        finally:
-            lock.release_write()
+        gt.append(self._warm_key(fn), f"+{self.host.id}\n".encode(),
+                  host=self.host.id)
 
     def deregister_warm(self, host_id: str, fn: Optional[str] = None) -> None:
         gt = self.runtime.global_tier
         keys = ([self._warm_key(fn)] if fn else
                 [k for k in gt.keys() if k.startswith(WARM_PREFIX)])
         for key in keys:
-            lock = gt.lock(key)
-            lock.acquire_write()
-            try:
-                if gt.exists(key):
-                    hosts = set(json.loads(gt.get(key, host=host_id).decode()))
-                    hosts.discard(host_id)
-                    gt.set(key, json.dumps(sorted(hosts)).encode(), host=host_id)
-            finally:
-                lock.release_write()
+            if gt.exists(key):
+                gt.append(key, f"-{host_id}\n".encode(), host=host_id)
 
     # -- placement ---------------------------------------------------------------
 

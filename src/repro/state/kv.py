@@ -13,8 +13,15 @@ Per-key metadata (the global read/write lock implementing
 ``lock_state_global_read/write``, plus a write version) lives next to the
 value in its stripe.
 
-The store tracks per-host transfer bytes — the experiments' "network
-transfer" metric (Fig. 6b) reads from here.
+Data plane: values are **mutable numpy buffers**, and the zero-copy range
+primitives ``readinto``/``write_from`` memcpy directly between global
+storage and replica buffers under the stripe lock — no intermediate
+``bytes`` materialisation.  ``add_inplace`` applies a HOGWILD delta
+(``global += local − base``) arithmetically in the global buffer without
+copying the value at all.  The tier counts every byte it actually memcpys
+(``bytes_copied``/``total_copied``) next to the per-host transfer counters —
+the experiments' "network transfer" metric (Fig. 6b) reads the latter, the
+copy-accounting benchmark reads the former.
 """
 from __future__ import annotations
 
@@ -22,7 +29,9 @@ import threading
 import zlib
 from collections import defaultdict
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
 
 DEFAULT_CHUNK = 1 << 20          # 1 MiB state chunks
 DEFAULT_STRIPES = 64
@@ -70,14 +79,35 @@ class KeyMeta:
     version: int = 0                 # stripe-monotonic; stamped on every write
 
 
+class _Value:
+    """A mutable value buffer: numpy storage with amortised append growth."""
+
+    __slots__ = ("buf", "length")
+
+    def __init__(self, length: int = 0, capacity: int = 0):
+        self.buf = np.zeros(max(length, capacity), np.uint8)
+        self.length = length
+
+    def ensure(self, end: int) -> None:
+        """Grow logical length to ``end`` (capacity doubles, gap zero-filled)."""
+        if end > self.buf.size:
+            grown = np.zeros(max(end, 2 * self.buf.size), np.uint8)
+            grown[:self.length] = self.buf[:self.length]
+            self.buf = grown
+        if end > self.length:
+            self.buf[self.length:end] = 0       # stale capacity must read as 0
+            self.length = end
+
+
 class _Stripe:
     """One lock stripe: a mutex guarding a sub-map of keys + its counters."""
 
-    __slots__ = ("lock", "store", "meta", "locks", "vc", "pulled", "pushed")
+    __slots__ = ("lock", "store", "meta", "locks", "vc", "pulled", "pushed",
+                 "copied")
 
     def __init__(self):
         self.lock = threading.RLock()
-        self.store: Dict[str, bytearray] = {}
+        self.store: Dict[str, _Value] = {}
         self.meta: Dict[str, KeyMeta] = {}
         # RW locks live outside the meta map: a delete must not orphan a lock
         # some thread is holding, and version numbers draw from a monotonic
@@ -86,10 +116,16 @@ class _Stripe:
         self.vc = 0
         self.pulled: Dict[str, int] = {}     # per-host transfer bytes
         self.pushed: Dict[str, int] = {}
+        self.copied = 0                      # bytes actually memcpy'd by the tier
 
     def bump(self, key: str) -> None:
         self.vc += 1
         self.meta.setdefault(key, KeyMeta()).version = self.vc
+
+
+def _as_u8(a: np.ndarray) -> np.ndarray:
+    """Flat uint8 view of a contiguous array (no copy)."""
+    return a.reshape(-1).view(np.uint8)
 
 
 class GlobalTier:
@@ -98,7 +134,7 @@ class GlobalTier:
     On a real deployment this is Redis/Anna sharded across hosts; here one
     process hosts the authoritative map, with the same chunk/locking/byte
     semantics, so every state-protocol decision (what is pulled, when, how
-    many bytes) is real and measurable.
+    many bytes, how many copies) is real and measurable.
     """
 
     def __init__(self, chunk_size: int = DEFAULT_CHUNK,
@@ -127,7 +163,8 @@ class GlobalTier:
     def size(self, key: str) -> int:
         s = self._stripe(key)
         with s.lock:
-            return len(s.store.get(key, b""))
+            v = s.store.get(key)
+            return v.length if v is not None else 0
 
     def delete(self, key: str) -> None:
         s = self._stripe(key)
@@ -138,55 +175,172 @@ class GlobalTier:
     def get(self, key: str, *, host: str = "?") -> bytes:
         s = self._stripe(key)
         with s.lock:
-            val = bytes(s.store[key])
-            s.pulled[host] = s.pulled.get(host, 0) + len(val)
+            v = s.store[key]
+            val = v.buf[:v.length].tobytes()
+            s.pulled[host] = s.pulled.get(host, 0) + v.length
+            s.copied += v.length
         return val
 
     def set(self, key: str, value: bytes, *, host: str = "?") -> None:
         s = self._stripe(key)
+        n = len(value)
         with s.lock:
-            s.store[key] = bytearray(value)
+            v = s.store.get(key)
+            if v is None or v.buf.size < n:
+                v = _Value(capacity=n)
+                s.store[key] = v
+            v.length = n
+            if n:
+                v.buf[:n] = np.frombuffer(value, np.uint8)
             s.bump(key)
-            s.pushed[host] = s.pushed.get(host, 0) + len(value)
+            s.pushed[host] = s.pushed.get(host, 0) + n
+            s.copied += n
 
     def append(self, key: str, value: bytes, *, host: str = "?") -> None:
+        """Append ``value`` to the key (amortised O(len(value)): capacity
+        doubles, so delta-record logs don't rewrite the whole value)."""
+        s = self._stripe(key)
+        n = len(value)
+        with s.lock:
+            v = s.store.setdefault(key, _Value())
+            off = v.length
+            v.ensure(off + n)
+            if n:
+                v.buf[off:off + n] = np.frombuffer(value, np.uint8)
+            s.bump(key)
+            s.pushed[host] = s.pushed.get(host, 0) + n
+            s.copied += n
+
+    def rewrite(self, key: str, transform: Callable[[bytes], bytes], *,
+                host: str = "?") -> Tuple[bytes, int]:
+        """Atomically replace the value with ``transform(current)`` under the
+        stripe lock (e.g. compacting a delta-record log).  ``transform`` must
+        be pure — it runs with the stripe lock held.  Returns the new value
+        and its write version (captured atomically, so callers can cache
+        against exactly the state they produced)."""
         s = self._stripe(key)
         with s.lock:
-            s.store.setdefault(key, bytearray()).extend(value)
+            v = s.store.get(key)
+            cur = v.buf[:v.length].tobytes() if v is not None else b""
+            new = transform(cur)
+            n = len(new)
+            if v is None or v.buf.size < n:
+                v = _Value(capacity=n)
+                s.store[key] = v
+            v.length = n
+            if n:
+                v.buf[:n] = np.frombuffer(new, np.uint8)
             s.bump(key)
-            s.pushed[host] = s.pushed.get(host, 0) + len(value)
+            s.copied += len(cur) + n
+            return new, s.meta[key].version
 
     # -- chunked access ------------------------------------------------------
     #
-    # get_range / set_range are the transfer primitives: LocalTier.pull_chunk
-    # and push_dirty move every chunk through them, one stripe lock per key.
+    # get_range / set_range are the bytes-typed transfer primitives; the
+    # zero-copy data plane below (readinto / write_from / add_inplace) is
+    # what LocalTier.pull/pull_chunk/push/push_dirty/push_delta use.
 
     def get_range(self, key: str, offset: int, length: int, *,
                   host: str = "?") -> bytes:
         s = self._stripe(key)
         with s.lock:
-            buf = s.store[key]
-            if offset < 0 or offset + length > len(buf):
+            v = s.store[key]
+            if offset < 0 or offset + length > v.length:
                 raise IndexError(
                     f"state range [{offset}, {offset + length}) out of bounds "
-                    f"for {key!r} of size {len(buf)}")
-            val = bytes(buf[offset:offset + length])
+                    f"for {key!r} of size {v.length}")
+            val = v.buf[offset:offset + length].tobytes()
             s.pulled[host] = s.pulled.get(host, 0) + length
+            s.copied += length
         return val
 
     def set_range(self, key: str, offset: int, value: bytes, *,
                   host: str = "?") -> None:
         s = self._stripe(key)
+        n = len(value)
         with s.lock:
-            buf = s.store.setdefault(key, bytearray())
-            end = offset + len(value)
             if offset < 0:
                 raise IndexError("negative state offset")
-            if end > len(buf):
-                buf.extend(b"\x00" * (end - len(buf)))
-            buf[offset:end] = value
+            v = s.store.setdefault(key, _Value())
+            v.ensure(max(v.length, offset + n))
+            if n:
+                v.buf[offset:offset + n] = np.frombuffer(value, np.uint8)
             s.bump(key)
-            s.pushed[host] = s.pushed.get(host, 0) + len(value)
+            s.pushed[host] = s.pushed.get(host, 0) + n
+            s.copied += n
+
+    # -- zero-copy data plane (replica buffer <-> global buffer) --------------
+
+    def readinto(self, key: str, offset: int, dest: np.ndarray, *,
+                 host: str = "?", clamp: bool = False) -> int:
+        """memcpy ``value[offset : offset+len(dest)]`` straight into ``dest``
+        (a replica buffer view) under the stripe lock — one copy, no
+        intermediate ``bytes``.  With ``clamp``, a read past the current
+        value end copies what exists (a concurrent truncating push may have
+        shrunk the value since the caller sized its buffer).  Returns bytes
+        moved."""
+        dest = _as_u8(dest)
+        n = dest.size
+        s = self._stripe(key)
+        with s.lock:
+            v = s.store[key]
+            if offset < 0 or (not clamp and offset + n > v.length):
+                raise IndexError(
+                    f"state range [{offset}, {offset + n}) out of bounds "
+                    f"for {key!r} of size {v.length}")
+            n = min(n, max(v.length - offset, 0))
+            if n:
+                dest[:n] = v.buf[offset:offset + n]
+            s.pulled[host] = s.pulled.get(host, 0) + n
+            s.copied += n
+        return n
+
+    def write_from(self, key: str, offset: int, src: np.ndarray, *,
+                   host: str = "?", truncate: bool = False) -> int:
+        """memcpy ``src`` (a replica buffer view) straight into the global
+        buffer at ``offset`` under the stripe lock — one copy.  With
+        ``truncate`` the value's length becomes exactly ``offset + len(src)``
+        (full-value push semantics).  Returns bytes moved."""
+        src = _as_u8(src)
+        n = src.size
+        s = self._stripe(key)
+        with s.lock:
+            if offset < 0:
+                raise IndexError("negative state offset")
+            v = s.store.setdefault(key, _Value())
+            v.ensure(max(v.length, offset + n))
+            if n:
+                v.buf[offset:offset + n] = src
+            if truncate:
+                v.length = offset + n
+            s.bump(key)
+            s.pushed[host] = s.pushed.get(host, 0) + n
+            s.copied += n
+        return n
+
+    def add_inplace(self, key: str, local: np.ndarray,
+                    base: Optional[np.ndarray] = None, *,
+                    host: str = "?") -> int:
+        """HOGWILD delta push computed in place in the global buffer:
+        ``global += local`` then ``global -= base`` — no value-sized copy at
+        all (``bytes_copied`` does not move).  ``local``/``base`` are typed
+        replica views; the overlap with the stored value is updated.
+        Returns delta bytes accounted as pushed."""
+        dtype = local.dtype
+        itemsize = dtype.itemsize
+        s = self._stripe(key)
+        with s.lock:
+            v = s.store[key]
+            g = v.buf[:v.length - v.length % itemsize].view(dtype)
+            n = min(g.size, local.size)
+            if n:
+                g[:n] += local[:n]
+                if base is not None:
+                    g[:n] -= base[:n]
+            s.bump(key)
+            moved = n * itemsize
+            s.pushed[host] = s.pushed.get(host, 0) + moved
+        return moved
 
     def n_chunks(self, key: str) -> int:
         sz = self.size(key)
@@ -239,8 +393,18 @@ class GlobalTier:
                 total += sum(s.pulled.values()) + sum(s.pushed.values())
         return total
 
+    def total_copied(self) -> int:
+        """Bytes the tier actually memcpy'd (copy accounting: in-place delta
+        pushes and lock-free metadata reads move nothing here)."""
+        total = 0
+        for s in self._stripes:
+            with s.lock:
+                total += s.copied
+        return total
+
     def reset_metrics(self) -> None:
         for s in self._stripes:
             with s.lock:
                 s.pulled.clear()
                 s.pushed.clear()
+                s.copied = 0

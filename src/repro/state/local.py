@@ -4,6 +4,13 @@ Replicas live in *shared memory regions* (§3.3): one numpy buffer per state
 value, and every Faaslet on the host maps a **view** of the same buffer into
 its address space — reads and writes are genuinely shared, no serialisation.
 Chunk presence is tracked so a pull only transfers missing chunks.
+
+Tier synchronisation is single-copy each way: pulls ``readinto`` the replica
+buffer straight from global storage and pushes ``write_from`` it straight
+back (no get→bytes→frombuffer→assign round trip), and ``push_delta`` applies
+``global += local − base`` arithmetically in the global buffer — the
+HOGWILD serialisation point holds the key's global write lock for one
+in-place pass instead of four full-value copies.
 """
 from __future__ import annotations
 
@@ -83,11 +90,12 @@ class LocalTier:
         r.lock.acquire_write()
         try:
             if not r.full:
-                data = self.global_tier.get(key, host=self.host_id)
-                r.buf[:len(data)] = np.frombuffer(data, np.uint8)
+                if size:
+                    moved = self.global_tier.readinto(key, 0, r.buf[:size],
+                                                      host=self.host_id,
+                                                      clamp=True)
                 r.full = True
                 r.present_chunks = set(range(self.global_tier.n_chunks(key)))
-                moved = len(data)
         finally:
             r.lock.release_write()
         return moved
@@ -102,13 +110,13 @@ class LocalTier:
         try:
             if chunk_idx not in r.present_chunks:
                 start, length = self.global_tier.chunk_bounds(key, chunk_idx)
-                data = self.global_tier.get_range(key, start, length,
-                                                  host=self.host_id)
-                r.buf[start:start + len(data)] = np.frombuffer(data, np.uint8)
+                if length > 0:
+                    moved = self.global_tier.readinto(
+                        key, start, r.buf[start:start + length],
+                        host=self.host_id, clamp=True)
                 r.present_chunks.add(chunk_idx)
                 if len(r.present_chunks) == self.global_tier.n_chunks(key):
                     r.full = True
-                moved = length
         finally:
             r.lock.release_write()
         return moved
@@ -123,17 +131,19 @@ class LocalTier:
         return moved
 
     def push(self, key: str) -> int:
-        """Write the full local replica to the global tier.  Returns bytes."""
+        """Write the full local replica to the global tier (single memcpy
+        from the replica buffer).  Returns bytes."""
         with self._mutex:
             r = self._replicas[key]
         r.lock.acquire_read()
         try:
-            data = r.buf.tobytes()
+            moved = self.global_tier.write_from(key, 0, r.buf,
+                                                host=self.host_id,
+                                                truncate=True)
         finally:
             r.lock.release_read()
-        self.global_tier.set(key, data, host=self.host_id)
         r.dirty_chunks.clear()
-        return len(data)
+        return moved
 
     def push_dirty(self, key: str) -> int:
         """Push only chunks marked dirty (partial push).  Returns bytes."""
@@ -147,31 +157,38 @@ class LocalTier:
             for idx in dirty:
                 start = idx * cs
                 end = min(start + cs, r.buf.size)
-                self.global_tier.set_range(key, start,
-                                           r.buf[start:end].tobytes(),
-                                           host=self.host_id)
-                moved += end - start
+                if end > start:
+                    moved += self.global_tier.write_from(
+                        key, start, r.buf[start:end], host=self.host_id)
         finally:
             r.lock.release_read()
         r.dirty_chunks.clear()
         return moved
 
     def snapshot_base(self, key: str) -> None:
-        """Record the replica contents as the base for a future delta push."""
+        """Record the replica contents as the base for a future delta push.
+
+        Takes the replica write lock: the base is mutated in place (reusing
+        the allocation), and a concurrent ``push_delta`` reads it under the
+        read lock — exclusion here keeps it from observing a torn base."""
         r = self._replicas[key]
-        r.lock.acquire_read()
+        r.lock.acquire_write()
         try:
-            r.base = r.buf.copy()
+            if r.base is None or r.base.size != r.buf.size:
+                r.base = r.buf.copy()
+            else:
+                r.base[:] = r.buf            # reuse the allocation
         finally:
-            r.lock.release_read()
+            r.lock.release_write()
 
     def push_delta(self, key: str, dtype=np.float32) -> int:
         """Accumulating push: global += (local − base), then refresh base.
 
         The cross-host-safe HOGWILD push (the fused ``kernels/state_push``
         path on device): concurrent pushes from different hosts compose
-        instead of overwriting.  Runs under the key's global write lock.
-        Returns bytes moved."""
+        instead of overwriting.  Runs under the key's global write lock, and
+        the accumulation happens *in place in the global buffer* — no
+        full-value copy on this path.  Returns bytes moved."""
         r = self._replicas[key]
         gt = self.global_tier
         lock = gt.lock(key)
@@ -179,22 +196,15 @@ class LocalTier:
         try:
             r.lock.acquire_read()
             try:
-                local = r.buf.view(dtype).copy()
-                base = (r.base.view(dtype) if r.base is not None
-                        else np.zeros_like(local))
-                delta = local - base
+                local = r.buf.view(dtype)
+                base = (r.base.view(dtype)[:local.size]
+                        if r.base is not None else None)
+                moved = gt.add_inplace(key, local, base, host=self.host_id)
             finally:
                 r.lock.release_read()
-            cur = np.frombuffer(gt.get(key, host=self.host_id), dtype).copy()
-            cur[:delta.size] += delta[:cur.size]
-            gt.set(key, cur.tobytes(), host=self.host_id)
-            r.lock.acquire_write()
-            try:
-                r.base = r.buf.copy()
-            finally:
-                r.lock.release_write()
+            self.snapshot_base(key)
             r.dirty_chunks.clear()
-            return delta.nbytes
+            return moved
         finally:
             lock.release_write()
 

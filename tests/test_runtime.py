@@ -62,18 +62,22 @@ def test_warm_faaslets_reused_and_reset():
         leaks = []
 
         def fn(api):
+            api.faaslet.brk(64)
             data = bytes(api.faaslet.read(0, 6))
             leaks.append(data)
-            api.faaslet.brk(64)
             api.faaslet.write(0, b"secret")
             return 0
 
         rt.upload(FunctionDef("fn", fn))
         for _ in range(3):
-            rt.wait(rt.invoke("fn"), timeout=10)
+            assert rt.wait(rt.invoke("fn"), timeout=10) == 0
         stats = rt.cold_start_stats()
         assert stats["warm_hits"] >= 2
+        assert len(leaks) == 3
         assert b"secret" not in leaks[1:]            # reset wiped it
+        # the reset went through the O(dirty) CoW path, not a full copy
+        assert stats["resets"] == 3
+        assert 1 <= stats["reset_pages"] <= 3
     finally:
         rt.shutdown()
 
@@ -246,6 +250,73 @@ def test_counter_and_dict_consistency_under_concurrency():
         cid = rt.invoke("read")
         rt.wait(cid, timeout=10)
         assert rt.output(cid) == b"20"
+    finally:
+        rt.shutdown()
+
+
+def test_container_tier_dropped_on_failed_call():
+    """A failed call in container isolation must not leave its private tier
+    (half-written replicas) behind: the retry re-pulls clean state."""
+    rt = FaasmRuntime(n_hosts=1, isolation="container")
+    try:
+        VectorAsync.create(rt.global_tier, "w", np.zeros(8, np.float32))
+        attempts = {"n": 0}
+
+        def writer(api):
+            attempts["n"] += 1
+            v = VectorAsync(api, "w")
+            v[0] = 13.0                          # half-written replica
+            if attempts["n"] == 1:
+                raise RuntimeError("boom")       # fail before push
+            # retry: the private replica must be a clean re-pull, not the
+            # poisoned one from the failed attempt
+            api.write_call_output(
+                np.asarray(v.values, np.float32).tobytes())
+            return 0
+
+        rt.upload(FunctionDef("writer", writer))
+        host = rt.hosts["host0"]
+        c1 = rt.invoke("writer")
+        assert rt.wait(c1, timeout=10) == 1      # first attempt fails
+        assert host._container_tiers == {}       # tier dropped with the failure
+        c2 = rt.invoke("writer")
+        assert rt.wait(c2, timeout=10) == 0
+    finally:
+        rt.shutdown()
+
+
+def test_straggler_cancelled_after_twin_settles():
+    """Speculation cleanup: once the twin's result is adopted, the straggler
+    stops at its next host-interface checkpoint instead of running its loop
+    to completion in an executor slot."""
+    rt = FaasmRuntime(n_hosts=2, straggler_timeout=0.2)
+    try:
+        VectorAsync.create(rt.global_tier, "w", np.zeros(4, np.float32))
+        progress = {"first": 0}
+        state = {"n": 0}
+
+        def sometimes_slow(api):
+            state["n"] += 1
+            if state["n"] == 1:                  # first attempt straggles
+                for _ in range(100):
+                    time.sleep(0.05)
+                    api.pull_state("w")          # cooperative checkpoint
+                    progress["first"] += 1
+            api.write_call_output(b"ok")
+            return 0
+
+        rt.upload(FunctionDef("s", sometimes_slow))
+        cid = rt.invoke("s")
+        assert rt.wait(cid, timeout=30) == 0
+        assert rt.output(cid) == b"ok"
+        # the straggler hits a checkpoint within ~50ms of the twin settling
+        deadline = time.perf_counter() + 5.0
+        while time.perf_counter() < deadline and \
+                sum(h.cancelled_execs for h in rt.hosts.values()) == 0:
+            time.sleep(0.05)
+        assert sum(h.cancelled_execs for h in rt.hosts.values()) == 1
+        assert progress["first"] < 50            # it stopped early, not at 100
+        assert rt.call(cid).status == "done"     # the adopted result stands
     finally:
         rt.shutdown()
 
