@@ -8,12 +8,19 @@ churn (instances created per second).
 Copy accounting (``state_copy/*`` rows, also written to ``BENCH_state.json``):
 
   * ``reset_dirty_us``    — §5.2 post-call reset of a 16 MB-arena Faaslet with
-                            one dirty page via ``reset_from_base`` (re-stamps
-                            only dirty pages from the shared CoW base).
+                            one dirty page via ``reset_from_base``.  On the
+                            mmap path the reset madvises the dirty page back
+                            to the kernel (~5 µs, and RSS shrinks); the loop
+                            here re-dirties the page each iteration, so this
+                            row *includes* the ~64 KB refault the next call
+                            pays — the reclaim policy's latency-for-RSS trade.
   * ``reset_full_us``     — the pre-CoW baseline: ``restore_arena`` memcpying
                             the whole snapshot back.  The ratio is the
-                            O(dirty)-vs-O(arena) headline; it should be ≥ 10x
-                            and grows linearly with arena size.
+                            O(dirty)-vs-O(arena) headline and grows with
+                            arena size.  Under the madvise reclaim policy
+                            expect ~4x at 16 MB/1 page (refault included, RSS
+                            returned); the pure-memcpy reset was ~100x but
+                            kept every touched page resident.
   * ``restore_cow_us``    — stamping out a fresh Faaslet by binding the base
                             MAP_PRIVATE (O(1) in arena size) vs
                             ``restore_copy_us`` paying the full memcpy +
@@ -25,6 +32,12 @@ Copy accounting (``state_copy/*`` rows, also written to ``BENCH_state.json``):
                             end; the old bytes-typed path copied it ≥ 2x per
                             direction (get→bytes→frombuffer→assign on pull;
                             get+copy+add+set under the write lock on push).
+
+Push-wire accounting (``state_push/*`` rows, written to ``BENCH_push.json``):
+exact vs int8 ``push_delta`` of a 4 MB f32 key — wall time per push, bytes
+moved per push (the int8 wire ships the quantised payload + per-row scales,
+~26% of the f32 bytes), and the error-feedback residual cap across 10
+consecutive pushes (bounded: quantisation error doesn't accumulate).
 """
 import json
 import time
@@ -144,6 +157,45 @@ def _bench_state_copies() -> dict:
     }
 
 
+def _bench_push_wire() -> dict:
+    """Exact vs int8 ``push_delta`` of a 4 MB f32 key: wall time and bytes
+    moved per push, same update stream for both wires, residual cap across
+    the int8 run (the ISSUE-4 acceptance row)."""
+    size = 4 << 20
+    n = size // 4
+    n_pushes = 10
+    rng = np.random.default_rng(0)
+    updates = [(rng.normal(size=n) * 0.01).astype(np.float32)
+               for _ in range(n_pushes)]
+    rows = {}
+    for wire in ("exact", "int8"):
+        gt = GlobalTier()
+        gt.set("w", np.zeros(n, np.float32).tobytes(), host="up")
+        lt = LocalTier("h0", gt)
+        lt.pull("w")
+        lt.snapshot_base("w")
+        view = lt.replica("w").buf.view(np.float32)
+        view[:] += updates[0]
+        lt.push_delta("w", wire=wire)             # warm the kernel/jit path
+        gt.reset_metrics()
+        t0 = time.perf_counter()
+        for u in updates:
+            view[:] += u
+            lt.push_delta("w", wire=wire)
+        wall = time.perf_counter() - t0
+        r = lt.replica("w").residual
+        rows[wire] = {
+            "value_mb": size >> 20,
+            "pushes": n_pushes,
+            "push_ms": wall / n_pushes * 1e3,
+            "bytes_moved_per_push": gt.bytes_pushed["h0"] / n_pushes,
+            "residual_max": float(np.abs(r).max()) if r is not None else 0.0,
+        }
+    rows["wire_ratio"] = (rows["int8"]["bytes_moved_per_push"]
+                          / rows["exact"]["bytes_moved_per_push"])
+    return rows
+
+
 def main() -> None:
     # --- init latency: fresh Faaslet vs Proto restore (Tab. 3) ------------------
     n = 200
@@ -220,6 +272,22 @@ def main() -> None:
     print(f"# copy accounting written to BENCH_state.json: "
           f"reset {cow['reset_speedup']:.1f}x, "
           f"pull+push_delta {st['new_full_value_copies']:.2f} full-value copies")
+
+    # --- push wire: exact vs int8 quantised delta (kernels/state_push) -----------
+    pw = _bench_push_wire()
+    emit("state_push/exact_ms", pw["exact"]["push_ms"],
+         f"{pw['exact']['value_mb']}MB key, "
+         f"{pw['exact']['bytes_moved_per_push'] / 1e6:.2f}MB/push")
+    emit("state_push/int8_ms", pw["int8"]["push_ms"],
+         f"{pw['int8']['bytes_moved_per_push'] / 1e6:.2f}MB/push "
+         f"({pw['wire_ratio'] * 100:.0f}% of exact bytes)")
+    emit("state_push/int8_residual_max", pw["int8"]["residual_max"],
+         f"error-feedback cap after {pw['int8']['pushes']} pushes")
+    with open("BENCH_push.json", "w") as fh:
+        json.dump(pw, fh, indent=2)
+    print(f"# push wire written to BENCH_push.json: int8 moves "
+          f"{pw['wire_ratio'] * 100:.1f}% of exact bytes, residual "
+          f"{pw['int8']['residual_max']:.2e}")
 
 
 if __name__ == "__main__":

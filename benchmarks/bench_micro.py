@@ -13,7 +13,8 @@ from repro.kernels.flash_attention import flash_attention, attention_ref
 from repro.kernels.decode_attention import decode_attention, decode_attention_ref
 from repro.kernels.ssd_scan import ssd, ssd_ref
 from repro.kernels.moe_gmm import gmm, gmm_ref
-from repro.kernels.state_push import push, push_ref
+from repro.kernels.state_push import (apply_delta, push, push_ref,
+                                      quantize_delta)
 
 RNG = np.random.default_rng(0)
 
@@ -69,6 +70,16 @@ def main() -> None:
     p_fused = jax.jit(lambda: push(a, b, c, backend="xla"))
     t_fused = time_fn(lambda: p_fused().block_until_ready())
     emit("fig9_micro/state_push_fused", t_fused, "fused delta+apply, 64k f32")
+
+    # quantised push wire: encode (quantize_delta) + decode-apply (apply_delta)
+    t_q = time_fn(lambda: jax.block_until_ready(
+        quantize_delta(a, b, backend="xla")[0]))
+    emit("fig9_micro/state_push_quantize", t_q,
+         "int8 wire encode, 64k f32 (4x fewer push bytes)")
+    qw, sw, _ = quantize_delta(a, b, backend="xla")
+    t_ap = time_fn(lambda: jax.block_until_ready(
+        apply_delta(c, qw, sw, backend="xla")))
+    emit("fig9_micro/state_push_apply_q", t_ap, "int8 wire decode+apply")
 
     # host interface call overhead (Table 2 surface)
     from repro.core import FaasmRuntime, FunctionDef

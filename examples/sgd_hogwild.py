@@ -18,7 +18,7 @@ from repro.state.ddo import SparseMatrixReadOnly, VectorAsync
 
 
 def build_functions(n_features: int, n_cols: int, n_workers: int,
-                    n_epochs: int, lr: float = 0.05):
+                    n_epochs: int, lr: float = 0.05, wire: str = "exact"):
     def weight_update(api):
         lo, hi = np.frombuffer(api.read_call_input(), np.int32)
         mat = SparseMatrixReadOnly(api, "train_x")       # pulls only its columns
@@ -30,7 +30,7 @@ def build_functions(n_features: int, n_cols: int, n_workers: int,
             margin = float(labels[c] * (w.values[rows] * vals).sum())
             if margin < 1.0:
                 w.add(rows, lr * labels[c] * vals)       # lock-free shared write
-        w.push_delta()                                    # sporadic global push
+        w.push_delta(wire=wire)                           # sporadic global push
         return 0
 
     def sgd_main(api):
@@ -38,8 +38,11 @@ def build_functions(n_features: int, n_cols: int, n_workers: int,
         for _ in range(n_epochs):
             args = [np.asarray([w * per, (w + 1) * per], np.int32).tobytes()
                     for w in range(n_workers)]
-            # batch fan-out: one submission + one shared completion latch
-            cids = api.chain_call_many("weight_update", args)
+            # batch fan-out: one submission + one shared completion latch;
+            # the state hint steers placement onto hosts already holding
+            # warm replicas of the shared weight vector
+            cids = api.chain_call_many("weight_update", args,
+                                       state_hint=["weights"])
             rcs = api.await_all(cids)
             assert all(r == 0 for r in rcs), rcs
         return 0
@@ -47,7 +50,8 @@ def build_functions(n_features: int, n_cols: int, n_workers: int,
     return weight_update, sgd_main
 
 
-def run_mode(mode: str, X, y, n_workers: int, n_epochs: int, n_hosts: int):
+def run_mode(mode: str, X, y, n_workers: int, n_epochs: int, n_hosts: int,
+             wire: str = "exact"):
     rt = FaasmRuntime(n_hosts=n_hosts, capacity=max(2, n_workers),
                       isolation=mode)
     try:
@@ -56,7 +60,7 @@ def run_mode(mode: str, X, y, n_workers: int, n_epochs: int, n_hosts: int):
         VectorAsync.create(rt.global_tier, "weights",
                            np.zeros(X.shape[0], np.float32))
         weight_update, sgd_main = build_functions(
-            X.shape[0], X.shape[1], n_workers, n_epochs)
+            X.shape[0], X.shape[1], n_workers, n_epochs, wire=wire)
         rt.upload(FunctionDef("weight_update", weight_update))
         rt.upload(FunctionDef("sgd_main", sgd_main))
         rt.global_tier.reset_metrics()
@@ -86,14 +90,19 @@ def main():
     ap.add_argument("--hosts", type=int, default=2)
     ap.add_argument("--features", type=int, default=128)
     ap.add_argument("--examples", type=int, default=512)
+    ap.add_argument("--wire", choices=("exact", "int8"), default="exact",
+                    help="delta-push wire format (int8 = quantised "
+                         "kernels/state_push path, ~4x fewer push bytes)")
     args = ap.parse_args()
 
     X, y, _ = make_sparse_dataset(args.features, args.examples,
                                   density=0.1, seed=0)
     print(f"dataset: {args.features}x{args.examples} sparse, "
-          f"{args.workers} workers x {args.epochs} epochs\n")
+          f"{args.workers} workers x {args.epochs} epochs, "
+          f"wire={args.wire}\n")
     for mode in ("faaslet", "container"):
-        r = run_mode(mode, X, y, args.workers, args.epochs, args.hosts)
+        r = run_mode(mode, X, y, args.workers, args.epochs, args.hosts,
+                     wire=args.wire)
         print(f"[{r['mode']:9s}] wall={r['wall_s']:.2f}s "
               f"transfer={r['transfer_mb']:.2f}MB "
               f"billable={r['billable_gbs']:.2e}GB-s "

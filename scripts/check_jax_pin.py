@@ -12,11 +12,15 @@ failure:
 
   * JAX older/newer than the explicitly supported range  -> exit 1
   * pltpu importable but neither params class resolvable -> exit 1
+  * the ``kernels/state_push`` entry points (the wire codec dispatched from
+    ``LocalTier.push_delta(wire="int8")``) fail to import or to quantise a
+    trivial delta                                        -> exit 1
 
 Invoked standalone:  python scripts/check_jax_pin.py
 """
 from __future__ import annotations
 
+import os
 import re
 import sys
 
@@ -70,6 +74,28 @@ def main() -> int:
               "neither CompilerParams nor TPUCompilerParams (another "
               "rename?).  Update tpu_compiler_params() in "
               "src/repro/kernels/common.py and this pin.")
+        return 1
+
+    # the quantised-push wire codec is dispatched from the state tier on
+    # every int8 push_delta: make a JAX drift there loud, not a slow failure
+    # at push time.  Runs after the pltpu probes above so a pallas rename
+    # hits its targeted diagnostic first, not this generic one.
+    sys.path.insert(0, os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+    try:
+        from repro.kernels.state_push import dequantize, quantize_delta
+        from repro.kernels.state_push.kernel import (       # noqa: F401
+            apply_delta_pallas, quantize_delta_pallas)
+        import numpy as np
+        q, s, n = quantize_delta(np.ones(4, np.float32),
+                                 np.zeros(4, np.float32), backend="xla")
+        deq = np.asarray(dequantize(q, s, n))
+        assert n == 4 and abs(float(deq[0]) - 1.0) < 1e-2, (n, deq)
+    except Exception as e:
+        print(f"check_jax_pin: FAIL — state_push kernel entry points do not "
+              f"resolve under jax {jax.__version__}: {e!r}\n"
+              f"  LocalTier.push_delta(wire='int8') dispatches these; fix "
+              f"src/repro/kernels/state_push/ before trusting the tier.")
         return 1
 
     print(f"check_jax_pin: OK — jax {jax.__version__}, params class "

@@ -18,7 +18,9 @@ Restore/reset cost (§5.2) is proportional to what *changed*, not to arena
 size: a Faaslet tracks dirty WASM pages (``write``/``brk`` mark them), a
 Proto-Faaslet snapshot is bound as a shared read-only :class:`ArenaBase`
 (mapped copy-on-write, no per-restore arena copy), and the post-call reset
-re-stamps only the dirty pages from that base.
+restores only the dirty pages from that base — handing them back to the
+kernel via ``madvise(MADV_DONTNEED)`` on the mmap path (RSS shrinks under
+churn; ``reclaimed_pages`` counts them), memcpy re-stamping elsewhere.
 """
 from __future__ import annotations
 
@@ -167,6 +169,7 @@ class Faaslet:
         self.created_at = time.perf_counter()
         self.calls_served = 0
         self.restored_from_proto = False
+        self.reclaimed_pages = 0        # dirty pages handed back via madvise
         self._lock = threading.RLock()
 
     # -- private linear memory (brk/mmap) --------------------------------------
@@ -239,23 +242,59 @@ class Faaslet:
             self._dirty.clear()
 
     def reset_from_base(self) -> int:
-        """§5.2 post-call reset in O(dirty): re-stamp only the dirty pages
+        """§5.2 post-call reset in O(dirty): restore only the dirty pages
         from the bound base (byte-identical to a full ``restore_arena`` from
-        the same snapshot).  Returns the number of pages re-stamped."""
+        the same snapshot).  Returns the number of pages reset.
+
+        On the mmap MAP_PRIVATE path the dirty pages are handed back to the
+        kernel with ``madvise(MADV_DONTNEED)`` instead of memcpy re-stamping:
+        the private copy is dropped, the next access refaults the *shared*
+        base page (file holes read as zeros, matching ``stamp``), so RSS
+        shrinks under churn instead of every touched page staying resident
+        as a private copy.  Where madvise is unavailable (or refused) the
+        memcpy re-stamp fallback applies; ``reclaimed_pages`` counts only
+        pages actually madvise'd back."""
         with self._lock:
             if self._base is None:
                 raise RuntimeError("no ArenaBase bound; use restore_arena")
-            stamped = 0
-            for p in self._dirty:
-                lo = p * WASM_PAGE
+            reset = 0
+            can_reclaim = (self._mm is not None
+                           and hasattr(mmap, "MADV_DONTNEED")
+                           and hasattr(self._mm, "madvise"))
+            for lo, hi in self._dirty_runs():
                 if lo >= self._arena.size:
                     continue
-                self._base.stamp(self._arena, lo,
-                                 min(lo + WASM_PAGE, self._arena.size))
-                stamped += 1
+                hi = min(hi, self._arena.size)
+                n_pages = -(-(hi - lo) // WASM_PAGE)
+                if can_reclaim:
+                    try:
+                        self._mm.madvise(mmap.MADV_DONTNEED, lo, hi - lo)
+                        self.reclaimed_pages += n_pages
+                        reset += n_pages
+                        continue
+                    except (OSError, ValueError):
+                        can_reclaim = False      # fall back for the rest
+                for p_lo in range(lo, hi, WASM_PAGE):
+                    self._base.stamp(self._arena, p_lo,
+                                     min(p_lo + WASM_PAGE, self._arena.size))
+                    reset += 1
             self._dirty.clear()
             self._brk = self._base_brk
-            return stamped
+            return reset
+
+    def _dirty_runs(self):
+        """Yield (lo, hi) byte ranges of maximal runs of dirty pages, so the
+        madvise path issues one syscall per contiguous run."""
+        run_start = prev = None
+        for p in sorted(self._dirty):
+            if prev is not None and p == prev + 1:
+                prev = p
+                continue
+            if run_start is not None:
+                yield run_start * WASM_PAGE, (prev + 1) * WASM_PAGE
+            run_start = prev = p
+        if run_start is not None:
+            yield run_start * WASM_PAGE, (prev + 1) * WASM_PAGE
 
     # -- shared regions (§3.3) ------------------------------------------------------
 

@@ -71,13 +71,18 @@ class FaasmAPI:
         self.faaslet.usage.charge_net(n_out=len(args))
         return self.runtime.invoke(name, bytes(args), parent=self.call)
 
-    def chain_call_many(self, name: str, args_list) -> List[int]:
-        """Batch chain: one submission for the whole fan-out (ordered IDs)."""
+    def chain_call_many(self, name: str, args_list,
+                        state_hint: Optional[List[str]] = None) -> List[int]:
+        """Batch chain: one submission for the whole fan-out (ordered IDs).
+
+        ``state_hint`` names the state keys the batch touches so placement
+        can prefer hosts already holding warm replicas of them."""
         self.check_cancelled()
         args_list = [bytes(a) for a in args_list]
         for a in args_list:
             self.faaslet.usage.charge_net(n_out=len(a))
-        return self.runtime.invoke_many(name, args_list, parent=self.call)
+        return self.runtime.invoke_many(name, args_list, parent=self.call,
+                                        state_hint=state_hint)
 
     def await_call(self, call_id: int, timeout: Optional[float] = None) -> int:
         self.check_cancelled()
@@ -170,11 +175,38 @@ class FaasmAPI:
         n = self._local().push_dirty(key)
         self.faaslet.usage.charge_net(n_out=n)
 
-    def push_state_delta(self, key: str, dtype=np.float32) -> None:
-        """Accumulating push: global += local − base (cross-host HOGWILD)."""
+    def push_state_delta(self, key: str, dtype=np.float32,
+                         wire: str = "exact") -> None:
+        """Accumulating push: global += local − base (cross-host HOGWILD).
+
+        ``wire="int8"`` ships the fused ``kernels/state_push`` quantised
+        delta (int8 payload + per-row scales, ~¼ of the f32 bytes, with
+        per-replica error feedback); the network budget is charged the wire
+        bytes actually moved, not the value bytes."""
         self.check_cancelled()
-        n = self._local().push_delta(key, dtype=dtype)
+        n = self._local().push_delta(key, dtype=dtype, wire=wire)
         self.faaslet.usage.charge_net(n_out=n)
+
+    # -- device residency (DeviceReplica plane; transfers are intra-host) -----
+
+    def state_to_device(self, key: str, dtype=np.float32,
+                        track_delta: bool = False):
+        """Materialise the replica as a JAX device array (H2D, no global-tier
+        traffic).  With ``track_delta``, arms a device-native ``push_delta``
+        by snapshotting the device base at this sync point."""
+        self.check_cancelled()
+        return self._local().to_device(key, dtype=dtype,
+                                       track_delta=track_delta)
+
+    def state_update_device(self, key: str, value) -> None:
+        """Install a device-computed value as the replica's device copy."""
+        self.check_cancelled()
+        self._local().update_device(key, value)
+
+    def state_from_device(self, key: str) -> int:
+        """Sync the device value back into the shared host replica (D2H)."""
+        self.check_cancelled()
+        return self._local().from_device(key)
 
     def pull_state(self, key: str, track_delta: bool = False) -> None:
         self.check_cancelled()

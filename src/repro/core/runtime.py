@@ -30,6 +30,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro import cancellation
 from repro.core.faaslet import (CONTAINER_OVERHEAD_BYTES,
                                 FAASLET_OVERHEAD_BYTES, Faaslet)
 from repro.core.host_interface import CallCancelled, FaasmAPI
@@ -135,6 +136,7 @@ class Host:
         self.warm_hits = 0
         self.resets = 0                  # §5.2 post-call resets performed
         self.reset_pages = 0             # dirty pages re-stamped across resets
+        self.reclaimed_pages = 0         # dirty pages madvise'd back (CoW path)
         self.cancelled_execs = 0         # speculative losers stopped early
         self.init_seconds: List[float] = []
         self.billable_byte_seconds = 0.0
@@ -238,6 +240,10 @@ class Host:
         call.cold_start = cold
         api = FaasmAPI(faaslet, self, rt, call)
         t0 = time.perf_counter()
+        # arm the time-sliced cancel checkpoint: kernel dispatch wrappers
+        # call it, so pure-compute loops between host-interface calls also
+        # honour cancel_event within a bounded slice
+        cancellation.install(api.check_cancelled)
         try:
             ret = fdef.fn(api)
             rc = int(ret) if ret is not None else 0
@@ -249,6 +255,8 @@ class Host:
             rc, status, error = 1, "cancelled", repr(e)
         except Exception as e:
             rc, status, error = 1, "failed", repr(e)
+        finally:
+            cancellation.clear()                 # executor thread is reused
         t_end = time.perf_counter()
         dur = t_end - t0
         faaslet.usage.charge_cpu(int(dur * 1e9))
@@ -277,14 +285,18 @@ class Host:
         proto = rt.proto_for(call.fn, host=self.id, transfer=False)
         if proto is not None and self.isolation == "faaslet":
             if faaslet.has_base():
+                reclaimed0 = faaslet.reclaimed_pages
                 pages = faaslet.reset_from_base()
+                reclaimed = faaslet.reclaimed_pages - reclaimed0
             else:
                 faaslet.restore_arena(proto.arena, proto.brk)
                 pages = len(faaslet.dirty_pages)
                 faaslet.clear_dirty()
+                reclaimed = 0
             with self._mutex:
                 self.resets += 1
                 self.reset_pages += pages
+                self.reclaimed_pages += reclaimed
         with self._mutex:
             if self.alive:
                 self._warm[call.fn].append(faaslet)
@@ -453,12 +465,17 @@ class FaasmRuntime:
                parent: Optional[Call] = None) -> int:
         return self.invoke_many(fn, [input_data], parent=parent)[0]
 
-    def invoke_many(self, fn: str, inputs, parent: Optional[Call] = None
-                    ) -> List[int]:
+    def invoke_many(self, fn: str, inputs, parent: Optional[Call] = None,
+                    state_hint: Optional[List[str]] = None) -> List[int]:
         """Submit one call per input in a single batch; returns all call IDs.
 
         The IDs come back in input order — pair with :meth:`wait_all` for
         thousand-call fan-outs without per-call round trips.
+
+        ``state_hint`` optionally names the state keys the batch will touch:
+        placement then prefers warm hosts whose local tier already holds
+        those keys (Cloudburst-style locality awareness) before
+        round-robining, avoiding a redundant global-tier pull per host.
         """
         if fn not in self.functions:
             raise KeyError(f"function {fn!r} not uploaded")
@@ -471,19 +488,24 @@ class FaasmRuntime:
                 self._calls[call.id] = call
                 self._active.add(call.id)
                 calls.append(call)
-        self._dispatch_batch(calls)
+        self._dispatch_batch(calls, state_hint=state_hint)
         self._kick_monitor()
         return [c.id for c in calls]
 
-    def _dispatch_batch(self, calls: List[Call]) -> None:
+    def _dispatch_batch(self, calls: List[Call],
+                        state_hint: Optional[List[str]] = None) -> None:
         """Place a homogeneous batch with one warm-set resolution.
 
         Single calls keep the full Omega placement; for a fan-out the warm
         host set is read once and the batch round-robins across it, so
-        thousand-call waves don't pay a placement lookup per call."""
+        thousand-call waves don't pay a placement lookup per call.  When the
+        batch declares the state keys it touches (``state_hint``), warm
+        hosts already holding replicas of those keys are preferred — the
+        batch round-robins over the holders (most keys first) and only
+        falls back to the full warm pool when nobody holds anything."""
         if not calls:
             return
-        if len(calls) == 1:
+        if len(calls) == 1 and not state_hint:
             self._dispatch(calls[0])
             return
         fn = calls[0].fn
@@ -499,6 +521,14 @@ class FaasmRuntime:
         if not pool:
             sched.register_warm(fn)          # batch cold-starts on the entry
             pool = [entry]
+        if state_hint:
+            scored = [(h, sum(1 for k in state_hint if h.local_tier.has(k)))
+                      for h in pool]
+            holders = [h for h, score in
+                       sorted(scored, key=lambda t: t[1], reverse=True)
+                       if score > 0]
+            if holders:
+                pool = holders
         n = len(pool)
         for i, c in enumerate(calls):
             c.attempts += 1
@@ -740,6 +770,8 @@ class FaasmRuntime:
             "init_p99_ms": 1e3 * float(np.percentile(inits, 99)) if inits else 0.0,
             "resets": sum(h.resets for h in self.hosts.values()),
             "reset_pages": sum(h.reset_pages for h in self.hosts.values()),
+            "reclaimed_pages": sum(h.reclaimed_pages
+                                   for h in self.hosts.values()),
         }
 
     def shutdown(self) -> None:

@@ -17,6 +17,8 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro import cancellation
+
 BACKENDS = ("xla", "pallas", "pallas_interpret")
 
 NEG_INF = float(-1e30)   # large-negative instead of -inf: keeps bf16 softmax NaN-free
@@ -32,6 +34,10 @@ def default_backend() -> str:
 
 
 def resolve_backend(backend: str | None) -> str:
+    # every kernel dispatch wrapper passes through here, making it the
+    # time-sliced cancellation checkpoint for long pure-compute loops that
+    # never touch a host-interface call (cost: one thread-local read)
+    cancellation.checkpoint()
     b = backend or "auto"
     if b == "auto":
         return default_backend()

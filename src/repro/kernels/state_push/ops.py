@@ -13,6 +13,12 @@ from repro.kernels.state_push import ref as _ref
 from repro.kernels.state_push.kernel import (LANES, apply_delta_pallas,
                                              push_pallas, quantize_delta_pallas)
 
+# the xla path is the hot CPU-host wire codec (LocalTier.push_delta calls it
+# per push): jit once, jax caches the executable per shape
+_quantize_ref = jax.jit(_ref.quantize_delta_ref)
+_apply_ref = jax.jit(_ref.apply_delta_ref)
+_push_ref = jax.jit(_ref.push_ref)
+
 
 def _to_rows(x):
     flat = jnp.ravel(x).astype(jnp.float32)
@@ -36,11 +42,24 @@ def quantize_delta(local, base, *, backend: str | None = None):
     lr, n = _to_rows(local)
     br, _ = _to_rows(base)
     if b == "xla":
-        q, s = _ref.quantize_delta_ref(lr, br)
+        q, s = _quantize_ref(lr, br)
     else:
         q, s = quantize_delta_pallas(lr, br, block_rows=_block_rows(lr.shape[0]),
                                      interpret=(b == "pallas_interpret"))
     return q, s, n
+
+
+def dequantize(q, scales, numel: int):
+    """Decode a wire tuple back to the flat f32 delta of length ``numel``.
+
+    The pad region (rows*128 − numel) quantises to zero-delta, so the trim
+    here drops only zeros."""
+    return (q.astype(jnp.float32) * scales).reshape(-1)[:numel]
+
+
+def wire_nbytes(q, scales) -> int:
+    """Bytes the compressed push actually moves: int8 payload + f32 scales."""
+    return int(q.size) + int(scales.size) * 4
 
 
 def apply_delta(global_val, q, scales, *, backend: str | None = None):
@@ -49,7 +68,7 @@ def apply_delta(global_val, q, scales, *, backend: str | None = None):
     shape, dtype = global_val.shape, global_val.dtype
     gr, n = _to_rows(global_val)
     if b == "xla":
-        out = _ref.apply_delta_ref(gr, q, scales)
+        out = _apply_ref(gr, q, scales)
     else:
         out = apply_delta_pallas(gr, q, scales,
                                  block_rows=_block_rows(gr.shape[0]),
@@ -65,7 +84,7 @@ def push(local, base, global_val, *, backend: str | None = None):
     br, _ = _to_rows(base)
     gr, _ = _to_rows(global_val)
     if b == "xla":
-        out = _ref.push_ref(lr, br, gr)
+        out = _push_ref(lr, br, gr)
     else:
         out = push_pallas(lr, br, gr, block_rows=_block_rows(lr.shape[0]),
                           interpret=(b == "pallas_interpret"))

@@ -26,13 +26,19 @@ from repro.models import ExecConfig, build_model
 
 
 def make_infer_function(model, treedef, host_leaves, prompt_len: int = 16,
-                        cache_key=("serve", "fwd")):
+                        cache_key=("serve", "fwd"), state_wire: str = None):
     """Build the FAASM ``infer`` FunctionDef for a single-shot forward pass.
 
     The jitted executable lands in the runtime's ExecutableCache under
     ``cache_key``; the (numpy, picklable) weights travel in the Proto-Faaslet
     snapshot.  Shared by :func:`run_faasm_fanout` and
-    ``examples/inference_serving.py``."""
+    ``examples/inference_serving.py``.
+
+    With ``state_wire`` set, each request additionally accumulates the
+    predicted token into the shared ``serve/stats`` histogram and pushes the
+    delta with that wire format (``"int8"`` = the quantised
+    ``kernels/state_push`` path) — the stateful-serving traffic the wire
+    choice is about."""
     from repro.core import FunctionDef
 
     def _build_fwd():
@@ -54,8 +60,14 @@ def make_infer_function(model, treedef, host_leaves, prompt_len: int = 16,
         tokens = np.frombuffer(api.read_call_input(),
                                np.int32).reshape(1, -1)
         logits = fwd(p, jnp.asarray(tokens))
-        api.write_call_output(
-            np.asarray(jnp.argmax(logits[0, -1])).tobytes())
+        tok = int(np.asarray(jnp.argmax(logits[0, -1])))
+        if state_wire is not None:
+            from repro.state.ddo import VectorAsync
+            stats = VectorAsync(api, "serve/stats")
+            stats.pull(track_delta=True)
+            stats.add([tok], 1.0)
+            stats.push_delta(wire=state_wire)
+        api.write_call_output(np.int32(tok).tobytes())
         return 0
 
     return FunctionDef("infer", infer, init_fn=init)
@@ -63,36 +75,53 @@ def make_infer_function(model, treedef, host_leaves, prompt_len: int = 16,
 
 def run_faasm_fanout(model, params, vocab_size: int, n_requests: int,
                      prompt_len: int = 16, n_hosts: int = 1,
-                     capacity: int = 8) -> dict:
+                     capacity: int = 8, state_wire: str = None) -> dict:
     """Serve ``n_requests`` single-shot requests through the FAASM runtime.
 
     Each request is one Faaslet call running the jitted forward pass; the
     whole wave is submitted with ``invoke_many`` and awaited on one shared
-    latch (``wait_all``), the thousand-call fan-out path."""
+    latch (``wait_all``), the thousand-call fan-out path.  ``state_wire``
+    turns on the shared serving-stats state (see
+    :func:`make_infer_function`) and picks its push wire format; the batch
+    then also carries a ``state_hint`` so placement prefers hosts already
+    holding the stats replica."""
     from repro.core import FaasmRuntime
+    from repro.state.ddo import VectorAsync
 
     flat, treedef = jax.tree_util.tree_flatten(params)
     host_leaves = [np.asarray(x) for x in flat]
     rt = FaasmRuntime(n_hosts=n_hosts, capacity=capacity)
+    hint = ["serve/stats"] if state_wire is not None else None
     try:
+        if state_wire is not None:
+            VectorAsync.create(rt.global_tier, "serve/stats",
+                               np.zeros(vocab_size, np.float32))
         rt.upload(make_infer_function(model, treedef, host_leaves,
-                                      prompt_len=prompt_len))
+                                      prompt_len=prompt_len,
+                                      state_wire=state_wire))
         rng = np.random.default_rng(0)
         payloads = [rng.integers(0, vocab_size, prompt_len,
                                  dtype=np.int32).tobytes()
                     for _ in range(n_requests)]
         # warm every executor before timing the wave
-        rt.wait_all(rt.invoke_many("infer", payloads[:capacity]), timeout=300)
+        rt.wait_all(rt.invoke_many("infer", payloads[:capacity],
+                                   state_hint=hint), timeout=300)
+        rt.global_tier.reset_metrics()
         t0 = time.perf_counter()
-        cids = rt.invoke_many("infer", payloads)
+        cids = rt.invoke_many("infer", payloads, state_hint=hint)
         rcs = rt.wait_all(cids, timeout=600)
         wall = time.perf_counter() - t0
         assert all(r == 0 for r in rcs), rcs
         lat_ms = np.asarray([rt.call(c).latency for c in cids]) * 1e3
-        return {"requests": n_requests, "wall_s": wall,
-                "throughput_rps": n_requests / wall,
-                "p50_ms": float(np.percentile(lat_ms, 50)),
-                "p99_ms": float(np.percentile(lat_ms, 99))}
+        out = {"requests": n_requests, "wall_s": wall,
+               "throughput_rps": n_requests / wall,
+               "p50_ms": float(np.percentile(lat_ms, 50)),
+               "p99_ms": float(np.percentile(lat_ms, 99))}
+        if state_wire is not None:
+            out["state_wire"] = state_wire
+            out["state_push_mb"] = sum(
+                rt.global_tier.bytes_pushed.values()) / 1e6
+        return out
     finally:
         rt.shutdown()
 
@@ -109,6 +138,9 @@ def main():
                     help="also fan out N requests through the FAASM runtime "
                          "(invoke_many/wait_all batch path)")
     ap.add_argument("--faasm-hosts", type=int, default=1)
+    ap.add_argument("--state-wire", choices=("exact", "int8"), default=None,
+                    help="track shared serving stats through the state tier "
+                         "and push deltas with this wire format")
     args = ap.parse_args()
 
     if args.smoke:
@@ -163,10 +195,14 @@ def main():
     if args.faasm_requests > 0:
         r = run_faasm_fanout(model, params, cfg.vocab_size,
                              args.faasm_requests, prompt_len=S,
-                             n_hosts=args.faasm_hosts)
+                             n_hosts=args.faasm_hosts,
+                             state_wire=args.state_wire)
         print(f"faasm fan-out: {r['requests']} reqs in {r['wall_s']:.2f}s "
               f"({r['throughput_rps']:.1f} req/s) "
               f"p50={r['p50_ms']:.1f}ms p99={r['p99_ms']:.1f}ms")
+        if "state_push_mb" in r:
+            print(f"  serve/stats pushes ({r['state_wire']} wire): "
+                  f"{r['state_push_mb']:.2f}MB to the global tier")
 
 
 if __name__ == "__main__":

@@ -150,10 +150,13 @@ class VectorAsync:
         self._flush_if_copy()
         self.api.push_state_partial(self.key)
 
-    def push_delta(self) -> None:
-        """Accumulating push — concurrent pushes from different hosts compose."""
+    def push_delta(self, wire: str = "exact") -> None:
+        """Accumulating push — concurrent pushes from different hosts compose.
+
+        ``wire="int8"`` ships the quantised ``kernels/state_push`` delta
+        (~¼ of the f32 bytes, error-feedback carried across pushes)."""
         self._flush_if_copy()
-        self.api.push_state_delta(self.key, dtype=np.float32)
+        self.api.push_state_delta(self.key, dtype=np.float32, wire=wire)
 
     def pull(self, track_delta: bool = False) -> None:
         self.api.pull_state(self.key, track_delta=track_delta)

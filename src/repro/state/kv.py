@@ -18,7 +18,10 @@ primitives ``readinto``/``write_from`` memcpy directly between global
 storage and replica buffers under the stripe lock — no intermediate
 ``bytes`` materialisation.  ``add_inplace`` applies a HOGWILD delta
 (``global += local − base``) arithmetically in the global buffer without
-copying the value at all.  The tier counts every byte it actually memcpys
+copying the value at all, and ``apply_quantized`` applies the int8
+``kernels/state_push`` wire format — the delta arrives as ``(q, scales)``
+and only those wire bytes (≈ value/4 for f32) are accounted as moved.  The
+tier counts every byte it actually memcpys
 (``bytes_copied``/``total_copied``) next to the per-host transfer counters —
 the experiments' "network transfer" metric (Fig. 6b) reads the latter, the
 copy-accounting benchmark reads the former.
@@ -341,6 +344,36 @@ class GlobalTier:
             moved = n * itemsize
             s.pushed[host] = s.pushed.get(host, 0) + moved
         return moved
+
+    def apply_quantized(self, key: str, q: np.ndarray, scales: np.ndarray,
+                        numel: int, *, dtype=np.float32,
+                        host: str = "?") -> int:
+        """Apply an int8-quantised delta push (the ``kernels/state_push``
+        wire format) in place in the global buffer.
+
+        ``q`` is the (rows, 128) int8 payload, ``scales`` the per-row f32
+        absmax scales, ``numel`` the original element count — the delta
+        decodes as ``q * scales`` trimmed to ``numel``.  Accounting counts
+        the **wire** bytes (int8 payload + scales), not the value bytes: a
+        4 MB f32 push moves ~1 MB + scales across the tier boundary.
+        Callers serialise under the key's global write lock, same as the
+        exact :meth:`add_inplace` path."""
+        q = np.asarray(q)
+        scales = np.asarray(scales, np.float32)
+        dt = np.dtype(dtype)
+        s = self._stripe(key)
+        with s.lock:
+            v = s.store[key]
+            g = v.buf[:v.length - v.length % dt.itemsize].view(dt)
+            n = min(g.size, int(numel))
+            if n:
+                delta = (q.astype(np.float32) * scales).reshape(-1)[:n]
+                g[:n] += delta.astype(dt, copy=False)
+            s.bump(key)
+            wire = q.nbytes + scales.nbytes
+            s.pushed[host] = s.pushed.get(host, 0) + wire
+            s.copied += wire
+        return wire
 
     def n_chunks(self, key: str) -> int:
         sz = self.size(key)

@@ -11,16 +11,77 @@ back (no get→bytes→frombuffer→assign round trip), and ``push_delta`` appli
 ``global += local − base`` arithmetically in the global buffer — the
 HOGWILD serialisation point holds the key's global write lock for one
 in-place pass instead of four full-value copies.
+
+Device-resident replica plane: a replica can additionally hold its value as
+a **JAX device array** (:class:`DeviceReplica`) with explicit
+``to_device``/``from_device`` sync.  Staleness is tracked against the
+replica's write version — every host-side mutation (``mark_dirty``, pull)
+bumps ``Replica.version``; the device copy records the version it was
+synced at, so a stale device array is never silently pushed.
+
+Quantised push wire: ``push_delta(..., wire="int8")`` runs the fused
+``kernels/state_push`` quantise kernel on the pusher (device-native when a
+fresh :class:`DeviceReplica` is bound — the value never round-trips through
+host buffers), ships the ``(q, scales, numel)`` wire tuple, and the global
+tier applies it via :meth:`GlobalTier.apply_quantized` — an f32 push moves
+~¼ of the exact-path bytes.  Per-replica **error feedback** carries the
+quantisation residual into the next push so repeated int8 pushes don't
+accumulate bias; sub-threshold values fall back to the exact in-place path.
 """
 from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Set
+from typing import Any, Dict, Optional, Set
 
 import numpy as np
 
 from repro.state.kv import GlobalTier, RWLock
+
+# Values smaller than this push exact even when wire="int8" is requested:
+# the per-row scales + dispatch overhead eat the 4x payload saving on tiny
+# values, and the exact in-place path moves zero value bytes anyway.
+INT8_WIRE_MIN_BYTES = 4096
+
+
+def _encode_delta(eff, base, backend):
+    """Quantise ``eff − base`` to the int8 wire and compute the
+    error-feedback residual (what the quantisation dropped, carried into the
+    next push).  Array-namespace agnostic: numpy or jax arrays in; the wire
+    tuple and residual come back as jax arrays — the single home of the
+    feedback math for both the host and device push branches."""
+    from repro.kernels.state_push import ops
+
+    q, s, n = ops.quantize_delta(eff, base, backend=backend)
+    deq = ops.dequantize(q, s, n)
+    residual = (eff - base).reshape(-1)[:n] - deq
+    return q, s, n, residual
+
+
+@dataclass
+class DeviceReplica:
+    """Optional JAX device residency for a replica (one value, one device).
+
+    ``value`` is the flat typed device array mirroring the replica buffer;
+    ``base`` the device-side snapshot a delta push diffs against (refreshing
+    it after a push is a rebind — device arrays are immutable, no copy);
+    ``residual`` the error-feedback carry for int8 wire pushes.
+    ``synced_version`` is the :attr:`Replica.version` the device copy was
+    taken at; ``device_dirty`` marks device-side writes (``update_device``)
+    not yet propagated back to the shared host buffer."""
+
+    dtype: np.dtype = np.dtype(np.float32)
+    value: Any = None                    # jnp.ndarray, flat
+    base: Any = None                     # jnp.ndarray snapshot for delta push
+    residual: Any = None                 # jnp.ndarray f32 error-feedback carry
+    synced_version: int = -1
+    device_dirty: bool = False
+
+    def fresh(self, replica: "Replica") -> bool:
+        """True when the device arrays are safe to push from: either in sync
+        with the host buffer or strictly ahead of it (device-side writes)."""
+        return self.value is not None and (
+            self.device_dirty or self.synced_version == replica.version)
 
 
 @dataclass
@@ -31,6 +92,9 @@ class Replica:
     dirty_chunks: Set[int] = field(default_factory=set)
     full: bool = False                   # whole value present
     base: Optional[np.ndarray] = None    # snapshot for delta-accumulating push
+    version: int = 0                     # bumped on every host-side mutation
+    residual: Optional[np.ndarray] = None  # f32 error-feedback carry (int8 wire)
+    device: Optional[DeviceReplica] = None
 
 
 class LocalTier:
@@ -57,6 +121,7 @@ class LocalTier:
                 grown = np.zeros(size, np.uint8)
                 grown[:r.buf.size] = r.buf
                 r.buf = grown
+                r.version += 1
             return r
 
     def has(self, key: str) -> bool:
@@ -79,6 +144,120 @@ class LocalTier:
         with self._mutex:
             return list(self._replicas.keys())
 
+    # -- device residency (explicit sync, version-checked staleness) -----------
+
+    def to_device(self, key: str, dtype=np.float32, *,
+                  track_delta: bool = False):
+        """Materialise (or refresh) the replica as a JAX device array.
+
+        Returns the device value.  A no-op when the device copy is already
+        at the replica's current write version.  With ``track_delta`` the
+        device-side base snapshot is (re)taken at this sync point, arming a
+        subsequent device-native ``push_delta``.  A host-side error-feedback
+        residual moves to the device with the value (ownership transfer —
+        the debt must not be applied twice).  While device-side writes are
+        pending (``update_device`` without a push or ``from_device``),
+        ``track_delta`` is a no-op: re-arming the base to the unsynced value
+        would silently drop that delta from every future push."""
+        import jax.numpy as jnp
+
+        r = self._replicas[key]
+        dt = np.dtype(dtype)
+        # write lock: this mutates r.device and the DeviceReplica fields, and
+        # concurrent to_device calls must not race on creating/arming them
+        r.lock.acquire_write()
+        try:
+            d = r.device
+            if d is None or d.dtype != dt:
+                d = DeviceReplica(dtype=dt)
+                r.device = d
+            if not d.device_dirty and (d.value is None
+                                       or d.synced_version != r.version):
+                # copy=True: jnp.asarray may alias host memory on the CPU
+                # backend, but the device replica must be a *snapshot* at
+                # this version — later host writes must not leak through
+                d.value = jnp.array(r.buf.view(dt), copy=True)
+                if r.residual is not None and \
+                        r.residual.size == int(d.value.size):
+                    d.residual = jnp.array(r.residual, copy=True)
+                    r.residual = None            # device owns the debt now
+                d.synced_version = r.version
+            if track_delta and not d.device_dirty:
+                d.base = d.value
+            return d.value
+        finally:
+            r.lock.release_write()
+
+    def update_device(self, key: str, value) -> None:
+        """Install a device-computed value as the replica's device copy.
+
+        The device copy is now *ahead* of the shared host buffer; call
+        :meth:`from_device` to propagate it (or ``push_delta`` to ship the
+        delta straight to the global tier without a host round-trip)."""
+        r = self._replicas[key]
+        r.lock.acquire_write()
+        try:
+            d = r.device
+            if d is None:
+                raise RuntimeError(f"no device replica for {key!r}; "
+                                   "call to_device first")
+            if int(np.prod(np.shape(value))) * d.dtype.itemsize > r.buf.size:
+                raise ValueError(f"device value larger than replica {key!r}")
+            d.value = value
+            d.device_dirty = True
+        finally:
+            r.lock.release_write()
+
+    def from_device(self, key: str) -> int:
+        """Copy the device value back into the shared host buffer (one D2H
+        memcpy), bump the write version, and mark the range dirty.  The
+        device-side delta base and error-feedback residual come back with
+        it, so a later *host-path* push diffs against the content the global
+        tier last saw instead of re-pushing device-era deltas.  Returns
+        bytes synced."""
+        r = self._replicas[key]
+        r.lock.acquire_write()
+        try:
+            d = r.device
+            if d is None or d.value is None:
+                raise RuntimeError(f"no device value for {key!r}")
+            # snapshot d.value under the lock: a concurrent update_device
+            # must not land between the read and the device_dirty clear
+            host = np.asarray(d.value).reshape(-1).view(np.uint8)
+            n = min(host.size, r.buf.size)
+            r.buf[:n] = host[:n]
+            if d.base is not None:
+                hb = np.asarray(d.base).reshape(-1).view(np.uint8)
+                if r.base is None or r.base.size != r.buf.size:
+                    r.base = np.zeros(r.buf.size, np.uint8)
+                m = min(hb.size, r.base.size)
+                r.base[:m] = hb[:m]
+            if d.residual is not None:
+                r.residual = np.array(d.residual, dtype=np.float32)
+                d.residual = None                # host owns the debt again
+            cs = self.global_tier.chunk_size
+            if n:
+                r.dirty_chunks.update(range(0, (n - 1) // cs + 1))
+            r.version += 1
+            d.synced_version = r.version
+            d.device_dirty = False
+        finally:
+            r.lock.release_write()
+        return n
+
+    def device_replica(self, key: str) -> Optional[DeviceReplica]:
+        r = self._replicas.get(key)
+        return r.device if r is not None else None
+
+    def device_stale(self, key: str) -> bool:
+        """True when host-side writes postdate the last device sync (and the
+        device holds no unsynced writes of its own)."""
+        r = self._replicas[key]
+        d = r.device
+        if d is None or d.value is None:
+            return True
+        return not d.device_dirty and d.synced_version != r.version
+
     # -- pull / push (tier synchronisation) ----------------------------------------
 
     def pull(self, key: str) -> int:
@@ -96,6 +275,8 @@ class LocalTier:
                                                       clamp=True)
                 r.full = True
                 r.present_chunks = set(range(self.global_tier.n_chunks(key)))
+                if moved:
+                    r.version += 1
         finally:
             r.lock.release_write()
         return moved
@@ -117,6 +298,8 @@ class LocalTier:
                 r.present_chunks.add(chunk_idx)
                 if len(r.present_chunks) == self.global_tier.n_chunks(key):
                     r.full = True
+                if moved:
+                    r.version += 1
         finally:
             r.lock.release_write()
         return moved
@@ -165,46 +348,160 @@ class LocalTier:
         r.dirty_chunks.clear()
         return moved
 
+    @staticmethod
+    def _refresh_base(r: Replica) -> None:
+        """Re-stamp the delta base from the buffer (replica write lock held
+        by the caller)."""
+        if r.base is None or r.base.size != r.buf.size:
+            r.base = r.buf.copy()
+        else:
+            r.base[:] = r.buf                # reuse the allocation
+
+    @staticmethod
+    def _base_f32(r: Replica, dt: np.dtype, n: int) -> np.ndarray:
+        """The delta base as f32 of exactly ``n`` elements (replica lock
+        held).  A base snapshotted before the buffer grew is zero-extended —
+        the new tail was never pushed, so its base *is* zero; silently using
+        an all-zeros base instead would re-push the whole value.
+
+        The common f32 full-size case returns a **view of r.base** (no
+        value-sized alloc+copy per push): callers must force any kernel
+        dispatched on it before mutating the base."""
+        if (r.base is not None and dt == np.float32
+                and r.base.size >= n * 4):
+            return r.base.view(np.float32)[:n]
+        out = np.zeros(n, np.float32)
+        if r.base is not None:
+            bv = r.base.view(dt)[:n]
+            out[:bv.size] = bv.astype(np.float32, copy=False)
+        return out
+
     def snapshot_base(self, key: str) -> None:
         """Record the replica contents as the base for a future delta push.
 
         Takes the replica write lock: the base is mutated in place (reusing
-        the allocation), and a concurrent ``push_delta`` reads it under the
-        read lock — exclusion here keeps it from observing a torn base."""
+        the allocation), and a concurrent ``push_delta`` holds the same lock
+        — exclusion keeps it from observing a torn base."""
         r = self._replicas[key]
         r.lock.acquire_write()
         try:
-            if r.base is None or r.base.size != r.buf.size:
-                r.base = r.buf.copy()
-            else:
-                r.base[:] = r.buf            # reuse the allocation
+            self._refresh_base(r)
         finally:
             r.lock.release_write()
 
-    def push_delta(self, key: str, dtype=np.float32) -> int:
+    def push_delta(self, key: str, dtype=np.float32, *, wire: str = "exact",
+                   backend: Optional[str] = None) -> int:
         """Accumulating push: global += (local − base), then refresh base.
 
-        The cross-host-safe HOGWILD push (the fused ``kernels/state_push``
-        path on device): concurrent pushes from different hosts compose
-        instead of overwriting.  Runs under the key's global write lock, and
-        the accumulation happens *in place in the global buffer* — no
-        full-value copy on this path.  Returns bytes moved."""
+        The cross-host-safe HOGWILD push: concurrent pushes from different
+        hosts compose instead of overwriting.  Runs under the key's global
+        write lock.  Returns bytes moved.
+
+        ``wire="exact"`` (default) accumulates *in place in the global
+        buffer* — no full-value copy on this path.  ``wire="int8"`` runs the
+        fused ``kernels/state_push`` quantise kernel on the pusher — from
+        the device arrays when a fresh :class:`DeviceReplica` is bound, so
+        device-resident values never round-trip through host buffers — and
+        ships the int8+scales wire tuple (~¼ of the f32 bytes), applied
+        globally via :meth:`GlobalTier.apply_quantized`.  Quantisation error
+        is carried per replica as an error-feedback residual into the next
+        push; float values smaller than ``INT8_WIRE_MIN_BYTES`` (and
+        non-float dtypes) fall back to the exact path.
+
+        Locking: both wires take the replica write lock first (same-replica
+        pushes are atomic — read, encode/add, base refresh) and the key's
+        global write lock second.  The int8 encode — the expensive kernel
+        dispatch — runs *before* the global lock is taken, so concurrent
+        pushers of the same key from different hosts pipeline their encodes
+        and only the cheap wire apply serialises."""
+        if wire not in ("exact", "int8"):
+            raise ValueError(f"wire {wire!r} not in ('exact', 'int8')")
         r = self._replicas[key]
         gt = self.global_tier
+        dt = np.dtype(dtype)
+        if (wire == "int8" and dt.kind == "f"
+                and r.buf.size >= INT8_WIRE_MIN_BYTES):
+            return self._push_delta_int8(key, r, dt, backend)
+        r.lock.acquire_write()
+        try:
+            local = r.buf.view(dt)
+            base = (r.base.view(dt)[:local.size]
+                    if r.base is not None else None)
+            lock = gt.lock(key)
+            lock.acquire_write()
+            try:
+                moved = gt.add_inplace(key, local, base, host=self.host_id)
+            finally:
+                lock.release_write()
+            self._refresh_base(r)
+            r.dirty_chunks.clear()
+            return moved
+        finally:
+            r.lock.release_write()
+
+    def _push_delta_int8(self, key: str, r: Replica, dt: np.dtype,
+                         backend: Optional[str]) -> int:
+        """Quantised delta push: encode under the replica write lock, apply
+        under the key's global write lock.
+
+        Device-native when the replica has a fresh device copy: quantise
+        runs on ``DeviceReplica.value``/``base`` and only the wire tuple
+        comes back to the host.  Otherwise the host replica buffer feeds the
+        kernel directly."""
+        gt = self.global_tier
+        r.lock.acquire_write()
+        try:
+            d = r.device
+            if d is not None and d.fresh(r):
+                import jax.numpy as jnp
+                local = d.value
+                if d.base is not None:
+                    base = d.base.astype(jnp.float32)
+                else:
+                    # device copy synced without track_delta: diff against
+                    # the host-side snapshot (what the exact wire would use),
+                    # NOT against zeros — zeros would re-push the full value.
+                    # copy=True: async kernel execution must not read a host
+                    # base buffer this push later mutates
+                    base = jnp.array(
+                        self._base_f32(r, dt, int(local.size)), copy=True)
+                eff = local.astype(jnp.float32)
+                if d.residual is not None:
+                    eff = eff + d.residual
+                q, s, n, residual = _encode_delta(eff, base, backend)
+                d.residual = residual
+                d.base = local               # device snapshot: a rebind
+                # d.value mirrors the host buffer only when no device-side
+                # writes are pending; then this push covered the host
+                # content too — refresh the host base (or a later host push
+                # re-applies this delta) and clear the dirty record.  With
+                # pending device writes the host chunks stay dirty: their
+                # content was NOT in this push.
+                host_synced = not d.device_dirty
+            else:
+                local = r.buf.view(dt)
+                base = self._base_f32(r, dt, local.size)
+                if r.residual is None or r.residual.size != local.size:
+                    r.residual = np.zeros(local.size, np.float32)
+                eff = local.astype(np.float32) + r.residual
+                q, s, n, residual = _encode_delta(eff, base, backend)
+                # owned writable copy: np.asarray of a jax array is read-only
+                # and would alias the device buffer
+                r.residual = np.array(residual, dtype=np.float32)
+                host_synced = True
+            # np.asarray blocks on the dispatched kernels, so nothing
+            # in flight still reads r.base when _refresh_base mutates it
+            q, s = np.asarray(q), np.asarray(s)
+            if host_synced:
+                self._refresh_base(r)
+                r.dirty_chunks.clear()
+        finally:
+            r.lock.release_write()
         lock = gt.lock(key)
         lock.acquire_write()
         try:
-            r.lock.acquire_read()
-            try:
-                local = r.buf.view(dtype)
-                base = (r.base.view(dtype)[:local.size]
-                        if r.base is not None else None)
-                moved = gt.add_inplace(key, local, base, host=self.host_id)
-            finally:
-                r.lock.release_read()
-            self.snapshot_base(key)
-            r.dirty_chunks.clear()
-            return moved
+            return gt.apply_quantized(key, q, s, n, dtype=dt,
+                                      host=self.host_id)
         finally:
             lock.release_write()
 
@@ -213,3 +510,4 @@ class LocalTier:
         cs = self.global_tier.chunk_size
         for idx in range(offset // cs, (offset + max(length, 1) - 1) // cs + 1):
             r.dirty_chunks.add(idx)
+        r.version += 1

@@ -288,3 +288,64 @@ def test_warm_set_survives_runtime_paths():
         assert rt.cold_start_stats()["warm_hits"] >= 4
     finally:
         rt.shutdown()
+
+
+# -- CoW page reclaim (madvise) ----------------------------------------------
+
+
+def test_reset_reclaims_dirty_pages_via_madvise():
+    """On the mmap path the post-call reset hands dirty pages back with
+    madvise(MADV_DONTNEED): content refaults to the shared base (byte-
+    identical to re-stamping) and ``reclaimed_pages`` counts them."""
+    import mmap as _mmap
+    pages = EAGER_COPY_MAX_BYTES // WASM_PAGE + 4      # force the mmap path
+    proto = _make_proto(pages * WASM_PAGE)
+    f, _ = proto.restore("h0")
+    if f._mm is None or not hasattr(_mmap, "MADV_DONTNEED"):
+        pytest.skip("mmap/madvise unavailable: memcpy fallback in use")
+    f.write(0, b"junk" * 64)
+    f.write(5 * WASM_PAGE + 3, b"zz")
+    f.write(6 * WASM_PAGE, b"ww")                      # contiguous run with 5
+    n = f.reset_from_base()
+    assert n >= 3
+    assert f.reclaimed_pages >= 3                      # reclaimed, not copied
+    assert f.dirty_pages == set()
+    # refault reads the shared base content back
+    assert bytes(f.read(0, 8)) == b"\xab" * 8
+    assert bytes(f.read(5 * WASM_PAGE, 8)) == b"\xab" * 8
+    assert bytes(f.read(6 * WASM_PAGE, 8)) == b"\xab" * 8
+    # beyond-snapshot pages refault as zeros (the memfd hole)
+    f.brk(f.memory_limit)
+    f.write(f.memory_limit - WASM_PAGE + 7, b"tail")
+    f.reset_from_base()
+    f.brk(f.memory_limit)
+    assert bytes(f.read(f.memory_limit - WASM_PAGE, 16)) == bytes(16)
+
+
+def test_runtime_reset_reports_reclaimed_pages():
+    """End-to-end: a warm call that dirties private memory on an mmap-CoW
+    Faaslet shows up in the host reclaimed_pages metric."""
+    import mmap as _mmap
+    if not hasattr(_mmap, "MADV_DONTNEED"):
+        pytest.skip("madvise unavailable")
+    rt = FaasmRuntime(n_hosts=1)
+    try:
+        def init(api):
+            api.brk(EAGER_COPY_MAX_BYTES + 2 * WASM_PAGE)  # big mmap-able arena
+            return None
+
+        def touch_mem(api):
+            api.sbrk(WASM_PAGE)                        # dirties a private page
+            return 0
+
+        rt.upload(FunctionDef("touch_mem", touch_mem, init_fn=init,
+                              memory_limit=4 * EAGER_COPY_MAX_BYTES))
+        for _ in range(3):
+            assert rt.wait(rt.invoke("touch_mem"), timeout=20) == 0
+        stats = rt.cold_start_stats()
+        assert stats["resets"] >= 3
+        if rt.hosts["host0"]._warm["touch_mem"] and \
+                rt.hosts["host0"]._warm["touch_mem"][0]._mm is not None:
+            assert stats["reclaimed_pages"] >= 1
+    finally:
+        rt.shutdown()

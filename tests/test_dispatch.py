@@ -313,3 +313,83 @@ def test_concurrent_runtime_calls_on_distinct_state_keys():
                 bytes([i]) * 128
     finally:
         rt.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# locality-aware batch placement (state_hint)
+# ---------------------------------------------------------------------------
+
+def test_invoke_many_state_hint_prefers_replica_holder():
+    """A batch declaring its state keys lands on the warm host whose local
+    tier already holds them; without a hint it round-robins the warm pool."""
+    rt = FaasmRuntime(n_hosts=3, capacity=8)
+    try:
+        rt.global_tier.set("wkey", bytes(4096), host="up")
+
+        def touch(api):
+            api.get_state("wkey", writable=False)
+            return 0
+
+        rt.upload(FunctionDef("touch", touch))
+        for hid in rt.hosts:                  # all hosts warm for "touch"
+            rt.schedulers[hid].register_warm("touch")
+        holder = "host2"
+        rt.hosts[holder].local_tier.pull("wkey")   # only host2 holds a replica
+
+        cids = rt.invoke_many("touch", [b""] * 9, state_hint=["wkey"])
+        assert rt.wait_all(cids, timeout=30) == [0] * 9
+        assert {rt.call(c).host for c in cids} == {holder}
+
+        # no hint: the same batch spreads over the whole warm pool
+        cids = rt.invoke_many("touch", [b""] * 9)
+        assert rt.wait_all(cids, timeout=30) == [0] * 9
+        assert len({rt.call(c).host for c in cids}) > 1
+    finally:
+        rt.shutdown()
+
+
+def test_state_hint_with_no_holder_falls_back_to_pool():
+    rt = FaasmRuntime(n_hosts=2, capacity=4)
+    try:
+        rt.upload(FunctionDef("echo2", _echo))
+        cids = rt.invoke_many("echo2", [b"a", b"b", b"c"],
+                              state_hint=["nobody-has-this"])
+        assert rt.wait_all(cids, timeout=30) == [0] * 3
+    finally:
+        rt.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# time-sliced cancellation inside kernel dispatch
+# ---------------------------------------------------------------------------
+
+def test_cancel_event_honoured_inside_pure_compute_loop():
+    """A loop that only dispatches kernels (no host-interface calls) still
+    stops within a bounded slice once its cancel_event is set — the kernel
+    dispatch wrappers run the installed time-sliced checkpoint."""
+    from repro.kernels.common import resolve_backend
+
+    rt = FaasmRuntime(n_hosts=1, capacity=2)
+    try:
+        started = threading.Event()
+
+        def spin(api):
+            started.set()
+            t0 = time.monotonic()
+            while time.monotonic() - t0 < 20.0:   # pure compute: no api calls
+                resolve_backend("xla")            # the dispatch chokepoint
+            return 0
+
+        rt.upload(FunctionDef("spin", spin))
+        cid = rt.invoke("spin")
+        assert started.wait(timeout=10)
+        t0 = time.monotonic()
+        rt.call(cid).cancel_event.set()
+        rc = rt.wait(cid, timeout=10)
+        elapsed = time.monotonic() - t0
+        call = rt.call(cid)
+        assert rc == 1 and call.status == "cancelled"
+        assert elapsed < 5.0                      # bounded slice, not 20 s
+        assert rt.hosts["host0"].cancelled_execs >= 1
+    finally:
+        rt.shutdown()
