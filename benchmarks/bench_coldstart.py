@@ -38,6 +38,14 @@ exact vs int8 ``push_delta`` of a 4 MB f32 key — wall time per push, bytes
 moved per push (the int8 wire ships the quantised payload + per-row scales,
 ~26% of the f32 bytes), and the error-feedback residual cap across 10
 consecutive pushes (bounded: quantisation error doesn't accumulate).
+
+Pull-wire accounting (``state_pull/*`` rows, written to ``BENCH_pull.json``):
+the symmetric direction — a warm 4 MB f32 replica refreshing after a peer
+push.  ``full`` re-pulls the whole value (the pre-fabric baseline);
+``exact``/``int8`` are delta pulls through the retained window (int8
+re-encodes with the fused quantise kernel, ~26% of the full-pull bytes);
+``broadcast`` is the push-based path — a subscribed peer replica receives
+the wire frame at push time and its next pull moves **zero** bytes.
 """
 import json
 import time
@@ -196,6 +204,65 @@ def _bench_push_wire() -> dict:
     return rows
 
 
+def _bench_pull_wire() -> dict:
+    """Warm-replica refresh after a peer push, per wire: full re-pull vs
+    delta pull (exact / int8) vs peer broadcast (zero-pull convergence)."""
+    size = 4 << 20
+    n = size // 4
+    n_rounds = 10
+    rng = np.random.default_rng(1)
+    updates = [(rng.normal(size=n) * 0.01).astype(np.float32)
+               for _ in range(n_rounds)]
+    rows = {}
+    for mode in ("full", "exact", "int8", "broadcast"):
+        gt = GlobalTier()
+        gt.set("w", np.zeros(n, np.float32).tobytes(), host="up")
+        pusher = LocalTier("p", gt)
+        pusher.pull("w")
+        pusher.snapshot_base("w")
+        view = pusher.replica("w").buf.view(np.float32)
+        puller = LocalTier("q", gt)
+        if mode == "broadcast":
+            puller.subscribe("w")
+        else:
+            puller.pull("w")
+        if mode == "full":
+            # pre-fabric baseline: forget the replica each round
+            def refresh():
+                puller.drop("w")
+                return puller.pull("w")
+        else:
+            def refresh():
+                return puller.pull("w", wire=mode if mode != "broadcast"
+                                   else None)
+        view[:] += updates[0]
+        pusher.push_delta("w", wire="int8")       # warm the codec paths
+        refresh()
+        gt.reset_metrics()
+        moved = 0
+        t0 = time.perf_counter()
+        for u in updates:
+            view[:] += u
+            pusher.push_delta("w", wire="int8")
+            moved += refresh()
+        wall = time.perf_counter() - t0
+        err = float(np.abs(
+            puller.replica("w").buf.view(np.float32)
+            - np.frombuffer(gt.get("w", host="check"), np.float32)).max())
+        rows[mode] = {
+            "value_mb": size >> 20,
+            "rounds": n_rounds,
+            "refresh_ms": wall / n_rounds * 1e3,
+            "pull_bytes_per_refresh": moved / n_rounds,
+            "broadcast_bytes": gt.total_broadcast(),
+            "replica_vs_global_maxerr": err,
+        }
+    rows["pull_ratio_int8_vs_full"] = (
+        rows["int8"]["pull_bytes_per_refresh"]
+        / max(rows["full"]["pull_bytes_per_refresh"], 1e-9))
+    return rows
+
+
 def main() -> None:
     # --- init latency: fresh Faaslet vs Proto restore (Tab. 3) ------------------
     n = 200
@@ -288,6 +355,28 @@ def main() -> None:
     print(f"# push wire written to BENCH_push.json: int8 moves "
           f"{pw['wire_ratio'] * 100:.1f}% of exact bytes, residual "
           f"{pw['int8']['residual_max']:.2e}")
+
+    # --- pull wire: warm-replica refresh through the symmetric fabric ------------
+    pl = _bench_pull_wire()
+    emit("state_pull/full_ms", pl["full"]["refresh_ms"],
+         f"{pl['full']['value_mb']}MB re-pull, "
+         f"{pl['full']['pull_bytes_per_refresh'] / 1e6:.2f}MB/refresh")
+    emit("state_pull/exact_ms", pl["exact"]["refresh_ms"],
+         f"{pl['exact']['pull_bytes_per_refresh'] / 1e6:.2f}MB/refresh "
+         f"(delta pull)")
+    emit("state_pull/int8_ms", pl["int8"]["refresh_ms"],
+         f"{pl['int8']['pull_bytes_per_refresh'] / 1e6:.2f}MB/refresh "
+         f"({pl['pull_ratio_int8_vs_full'] * 100:.0f}% of full-pull bytes)")
+    emit("state_pull/broadcast_pull_bytes",
+         pl["broadcast"]["pull_bytes_per_refresh"],
+         f"subscribed peer; {pl['broadcast']['broadcast_bytes'] / 1e6:.2f}MB "
+         f"fanned out push-side")
+    with open("BENCH_pull.json", "w") as fh:
+        json.dump(pl, fh, indent=2)
+    print(f"# pull wire written to BENCH_pull.json: int8 refresh moves "
+          f"{pl['pull_ratio_int8_vs_full'] * 100:.1f}% of full-pull bytes; "
+          f"broadcast peer pulls "
+          f"{pl['broadcast']['pull_bytes_per_refresh']:.0f} bytes")
 
 
 if __name__ == "__main__":

@@ -25,7 +25,9 @@ def build_functions(n_features: int, n_cols: int, n_workers: int,
         labels = np.frombuffer(bytes(api.get_state("labels", writable=False)),
                                np.float32)
         w = VectorAsync(api, "weights")
-        w.pull(track_delta=True)
+        if api.host.isolation == "faaslet":
+            w.subscribe()        # peer pushes land in the warm replica:
+        w.pull(track_delta=True)  # this pull then moves (near) zero bytes
         for c, rows, vals in mat.columns(int(lo), int(hi)):
             margin = float(labels[c] * (w.values[rows] * vals).sum())
             if margin < 1.0:
@@ -90,9 +92,12 @@ def main():
     ap.add_argument("--hosts", type=int, default=2)
     ap.add_argument("--features", type=int, default=128)
     ap.add_argument("--examples", type=int, default=512)
-    ap.add_argument("--wire", choices=("exact", "int8"), default="exact",
-                    help="delta-push wire format (int8 = quantised "
-                         "kernels/state_push path, ~4x fewer push bytes)")
+    ap.add_argument("--wire", choices=("auto", "exact", "int8"),
+                    default="auto",
+                    help="delta wire format: auto (default) lets the "
+                         "per-key WirePolicy pick int8 vs exact from the "
+                         "observed deltas; int8 forces the quantised "
+                         "kernels/state_push path (~4x fewer push bytes)")
     args = ap.parse_args()
 
     X, y, _ = make_sparse_dataset(args.features, args.examples,

@@ -76,14 +76,16 @@ def main() -> int:
               "src/repro/kernels/common.py and this pin.")
         return 1
 
-    # the quantised-push wire codec is dispatched from the state tier on
-    # every int8 push_delta: make a JAX drift there loud, not a slow failure
-    # at push time.  Runs after the pltpu probes above so a pallas rename
-    # hits its targeted diagnostic first, not this generic one.
+    # the quantised wire codec is dispatched from the state tier on every
+    # int8 push_delta, delta pull and peer broadcast: make a JAX drift there
+    # loud, not a slow failure at transfer time.  Runs after the pltpu
+    # probes above so a pallas rename hits its targeted diagnostic first,
+    # not this generic one.
     sys.path.insert(0, os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
     try:
-        from repro.kernels.state_push import dequantize, quantize_delta
+        from repro.kernels.state_push import (apply_pull, dequantize,
+                                              encode_pull, quantize_delta)
         from repro.kernels.state_push.kernel import (       # noqa: F401
             apply_delta_pallas, quantize_delta_pallas)
         import numpy as np
@@ -91,10 +93,18 @@ def main() -> int:
                                  np.zeros(4, np.float32), backend="xla")
         deq = np.asarray(dequantize(q, s, n))
         assert n == 4 and abs(float(deq[0]) - 1.0) < 1e-2, (n, deq)
+        # pull/broadcast direction: encode a catch-up delta and apply it to
+        # a replica value (GlobalTier.pull_wire / LocalTier broadcast apply)
+        q, s, n = encode_pull(np.full(4, 2.0, np.float32),
+                              np.zeros(4, np.float32), backend="xla")
+        got = np.asarray(apply_pull(np.ones(4, np.float32), q, s,
+                                    backend="xla"))
+        assert abs(float(got[0]) - 3.0) < 1e-2, got
     except Exception as e:
         print(f"check_jax_pin: FAIL — state_push kernel entry points do not "
               f"resolve under jax {jax.__version__}: {e!r}\n"
-              f"  LocalTier.push_delta(wire='int8') dispatches these; fix "
+              f"  The wire fabric (LocalTier.push_delta/pull(wire='int8'), "
+              f"GlobalTier.pull_wire, peer broadcast) dispatches these; fix "
               f"src/repro/kernels/state_push/ before trusting the tier.")
         return 1
 

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # Fast tier-1 gate: the ROADMAP verify command minus the slow interpret-mode
 # kernel matrix (run `pytest -m slow` for the full kernel sweep).  The
-# quantised-push suite (tests/test_quantized_push.py, xla rows) runs here;
-# its pallas_interpret parametrisations ride in the slow sweep.
+# quantised-push and wire-fabric suites (tests/test_quantized_push.py,
+# tests/test_wire_fabric.py — xla rows) run here; their pallas_interpret
+# parametrisations ride in the slow sweep (conftest auto-marks them).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

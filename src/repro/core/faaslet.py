@@ -170,6 +170,7 @@ class Faaslet:
         self.calls_served = 0
         self.restored_from_proto = False
         self.reclaimed_pages = 0        # dirty pages handed back via madvise
+        self.retained_pages = 0         # dirty pages re-stamped, kept resident
         self._lock = threading.RLock()
 
     # -- private linear memory (brk/mmap) --------------------------------------
@@ -241,24 +242,39 @@ class Faaslet:
             self._brk = self._base_brk
             self._dirty.clear()
 
-    def reset_from_base(self) -> int:
+    def reset_from_base(self, reclaim: str = "always",
+                        pressure: bool = False) -> int:
         """§5.2 post-call reset in O(dirty): restore only the dirty pages
         from the bound base (byte-identical to a full ``restore_arena`` from
         the same snapshot).  Returns the number of pages reset.
 
-        On the mmap MAP_PRIVATE path the dirty pages are handed back to the
-        kernel with ``madvise(MADV_DONTNEED)`` instead of memcpy re-stamping:
-        the private copy is dropped, the next access refaults the *shared*
-        base page (file holes read as zeros, matching ``stamp``), so RSS
-        shrinks under churn instead of every touched page staying resident
-        as a private copy.  Where madvise is unavailable (or refused) the
-        memcpy re-stamp fallback applies; ``reclaimed_pages`` counts only
-        pages actually madvise'd back."""
+        ``reclaim`` picks the latency-for-RSS trade per reset:
+
+          * ``"always"`` — on the mmap MAP_PRIVATE path, hand dirty pages
+            back with ``madvise(MADV_DONTNEED)``: the private copy is
+            dropped, the next access refaults the *shared* base page (file
+            holes read as zeros, matching ``stamp``), so RSS shrinks under
+            churn — but the next call pays a refault per re-dirtied page.
+          * ``"never"`` — memcpy re-stamp only: pages stay resident, hot
+            Faaslets stay refault-free.
+          * ``"auto"`` — ``"always"`` when the caller signals memory
+            ``pressure`` (host RSS over threshold, or the Faaslet is going
+            cold behind other warm instances), ``"never"`` otherwise.
+
+        ``reclaimed_pages`` counts pages actually madvise'd back;
+        ``retained_pages`` counts pages re-stamped and kept resident (the
+        madvise-unavailable fallback lands there too)."""
+        if reclaim not in ("auto", "always", "never"):
+            raise ValueError(
+                f"reclaim {reclaim!r} not in ('auto', 'always', 'never')")
+        if reclaim == "auto":
+            reclaim = "always" if pressure else "never"
         with self._lock:
             if self._base is None:
                 raise RuntimeError("no ArenaBase bound; use restore_arena")
             reset = 0
-            can_reclaim = (self._mm is not None
+            can_reclaim = (reclaim == "always"
+                           and self._mm is not None
                            and hasattr(mmap, "MADV_DONTNEED")
                            and hasattr(self._mm, "madvise"))
             for lo, hi in self._dirty_runs():
@@ -277,6 +293,7 @@ class Faaslet:
                 for p_lo in range(lo, hi, WASM_PAGE):
                     self._base.stamp(self._arena, p_lo,
                                      min(p_lo + WASM_PAGE, self._arena.size))
+                    self.retained_pages += 1
                     reset += 1
             self._dirty.clear()
             self._brk = self._base_brk

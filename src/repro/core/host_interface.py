@@ -176,13 +176,16 @@ class FaasmAPI:
         self.faaslet.usage.charge_net(n_out=n)
 
     def push_state_delta(self, key: str, dtype=np.float32,
-                         wire: str = "exact") -> None:
+                         wire: str = "auto") -> None:
         """Accumulating push: global += local − base (cross-host HOGWILD).
 
-        ``wire="int8"`` ships the fused ``kernels/state_push`` quantised
-        delta (int8 payload + per-row scales, ~¼ of the f32 bytes, with
-        per-replica error feedback); the network budget is charged the wire
-        bytes actually moved, not the value bytes."""
+        ``wire="auto"`` (default) lets the key's adaptive ``WirePolicy``
+        pick the codec from observed delta magnitude/density and residual
+        norm; ``"int8"`` forces the fused ``kernels/state_push`` quantised
+        frame (int8 payload + per-row scales, ~¼ of the f32 bytes, with
+        per-replica error feedback) and ``"exact"`` the f32 delta frame.
+        The network budget is charged the wire bytes actually moved, not
+        the value bytes."""
         self.check_cancelled()
         n = self._local().push_delta(key, dtype=dtype, wire=wire)
         self.faaslet.usage.charge_net(n_out=n)
@@ -208,12 +211,31 @@ class FaasmAPI:
         self.check_cancelled()
         return self._local().from_device(key)
 
-    def pull_state(self, key: str, track_delta: bool = False) -> None:
+    def pull_state(self, key: str, track_delta: bool = False,
+                   wire: Optional[str] = None) -> None:
+        """Replicate (or refresh) the value locally.  A warm replica
+        refreshes through the wire fabric: only the retained delta ships
+        (``wire="int8"`` ≈ ¼ of the f32 re-pull bytes; ``None``/"auto" lets
+        the key's ``WirePolicy`` decide), with a full-pull fallback when
+        the replica's base predates the retained window."""
         self.check_cancelled()
-        moved = self._local().pull(key)
+        moved = self._local().pull(key, wire=wire)
         if track_delta:
             self._local().snapshot_base(key)
         self.faaslet.usage.charge_net(n_in=moved)
+
+    def subscribe_state(self, key: str) -> None:
+        """Subscribe the host's replica to the key's push fan-out: peer
+        wire frames are applied in place as they land, so the warm replica
+        converges without this function (or any later call on this host)
+        paying a re-pull.  The initial sync pull is charged to the network
+        budget like any other pull."""
+        self.check_cancelled()
+        moved = self._local().subscribe(key)
+        self.faaslet.usage.charge_net(n_in=moved)
+
+    def unsubscribe_state(self, key: Optional[str] = None) -> None:
+        self._local().unsubscribe(key)
 
     def pull_state_chunk(self, key: str, chunk_idx: int) -> None:
         self.check_cancelled()

@@ -23,6 +23,7 @@ import itertools
 import queue
 import threading
 import time
+import zlib
 from collections import defaultdict
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
@@ -116,11 +117,20 @@ class Host:
     """One FAASM runtime instance (one server / TPU host)."""
 
     def __init__(self, host_id: str, runtime: "FaasmRuntime", *,
-                 capacity: int = 8, isolation: str = "faaslet"):
+                 capacity: int = 8, isolation: str = "faaslet",
+                 reclaim: str = "auto",
+                 reclaim_rss_bytes: int = 256 << 20):
         self.id = host_id
         self.runtime = runtime
         self.capacity = capacity
         self.isolation = isolation
+        # CoW page-reclaim policy for the §5.2 post-call reset: "always"
+        # madvises every dirty page back (lowest RSS, next call refaults),
+        # "never" re-stamps in place (hot Faaslets stay refault-free), and
+        # "auto" reclaims only when host RSS exceeds ``reclaim_rss_bytes``
+        # (the warm pool is LIFO, so the Faaslet being reset is the hot one)
+        self.reclaim = reclaim
+        self.reclaim_rss_bytes = reclaim_rss_bytes
         self.local_tier = LocalTier(host_id, runtime.global_tier)
         self._container_tiers: Dict[int, LocalTier] = {}
         self._warm: Dict[str, List[Faaslet]] = defaultdict(list)
@@ -137,6 +147,7 @@ class Host:
         self.resets = 0                  # §5.2 post-call resets performed
         self.reset_pages = 0             # dirty pages re-stamped across resets
         self.reclaimed_pages = 0         # dirty pages madvise'd back (CoW path)
+        self.retained_pages = 0          # dirty pages re-stamped, kept resident
         self.cancelled_execs = 0         # speculative losers stopped early
         self.init_seconds: List[float] = []
         self.billable_byte_seconds = 0.0
@@ -286,17 +297,33 @@ class Host:
         if proto is not None and self.isolation == "faaslet":
             if faaslet.has_base():
                 reclaimed0 = faaslet.reclaimed_pages
-                pages = faaslet.reset_from_base()
+                retained0 = faaslet.retained_pages
+                pressure = False
+                if self.reclaim == "auto":
+                    # the warm pool is LIFO (this Faaslet is appended last
+                    # and popped first), so a returning Faaslet is the HOT
+                    # one — keep it refault-free unless host RSS actually
+                    # crossed the threshold.  memory_bytes() counts only
+                    # pooled Faaslets; the one being reset is out of the
+                    # pool right now, so add its footprint (its dirty pages
+                    # are exactly what reclaim would return).
+                    pressure = (self.memory_bytes()
+                                + faaslet.memory_bytes()
+                                >= self.reclaim_rss_bytes)
+                pages = faaslet.reset_from_base(reclaim=self.reclaim,
+                                                pressure=pressure)
                 reclaimed = faaslet.reclaimed_pages - reclaimed0
+                retained = faaslet.retained_pages - retained0
             else:
                 faaslet.restore_arena(proto.arena, proto.brk)
                 pages = len(faaslet.dirty_pages)
                 faaslet.clear_dirty()
-                reclaimed = 0
+                reclaimed = retained = 0
             with self._mutex:
                 self.resets += 1
                 self.reset_pages += pages
                 self.reclaimed_pages += reclaimed
+                self.retained_pages += retained
         with self._mutex:
             if self.alive:
                 self._warm[call.fn].append(faaslet)
@@ -357,13 +384,16 @@ class FaasmRuntime:
                  use_proto: bool = True, capacity: int = 8,
                  chunk_size: int = 1 << 20,
                  straggler_timeout: Optional[float] = None,
-                 heartbeat_timeout: Optional[float] = None):
+                 heartbeat_timeout: Optional[float] = None,
+                 reclaim: str = "auto"):
         # heartbeat_timeout: when set, the background monitor declares hosts
         # silent for that long (with calls in flight) dead and requeues their
         # work.  Opt-in: a host only beats at call boundaries, so any timeout
         # shorter than a legitimate call would hard-fail a healthy host.
         assert isolation in ("faaslet", "container")
+        assert reclaim in ("auto", "always", "never")
         self.isolation = isolation
+        self.reclaim = reclaim
         self.use_proto = use_proto and isolation == "faaslet"
         self.global_tier = GlobalTier(chunk_size=chunk_size)
         self.vfs = VirtualFS(self.global_tier)
@@ -398,7 +428,8 @@ class FaasmRuntime:
             hid = f"host{len(self.hosts)}"
             while hid in self.hosts:
                 hid += "x"
-            h = Host(hid, self, capacity=capacity, isolation=self.isolation)
+            h = Host(hid, self, capacity=capacity, isolation=self.isolation,
+                     reclaim=self.reclaim)
             self.hosts[hid] = h
             self.schedulers[hid] = LocalScheduler(h, self)
             return hid
@@ -492,6 +523,27 @@ class FaasmRuntime:
         self._kick_monitor()
         return [c.id for c in calls]
 
+    @staticmethod
+    def _rank_holders(state_hint: List[str], holders: List[Host]) -> List[Host]:
+        """Order replica holders for a batch: consistent-hash pinning.
+
+        Each hint key is pinned to one holder by rendezvous hashing
+        (``crc32(key@host)`` max wins), so the same key lands on the same
+        holder batch after batch — its replica stays hot there instead of
+        being re-warmed round-robin across the holder set.  Holders are
+        ranked by how many of the batch's keys pin to them (tie-broken by
+        the hash itself, keeping the order deterministic)."""
+        votes = {h.id: 0 for h in holders}
+        for k in state_hint:
+            win = max(holders,
+                      key=lambda h: zlib.crc32(f"{k}@{h.id}".encode()))
+            votes[win.id] += 1
+        return sorted(
+            holders,
+            key=lambda h: (votes[h.id],
+                           zlib.crc32(f"{state_hint[0]}@{h.id}".encode())),
+            reverse=True)
+
     def _dispatch_batch(self, calls: List[Call],
                         state_hint: Optional[List[str]] = None) -> None:
         """Place a homogeneous batch with one warm-set resolution.
@@ -500,9 +552,14 @@ class FaasmRuntime:
         host set is read once and the batch round-robins across it, so
         thousand-call waves don't pay a placement lookup per call.  When the
         batch declares the state keys it touches (``state_hint``), warm
-        hosts already holding replicas of those keys are preferred — the
-        batch round-robins over the holders (most keys first) and only
-        falls back to the full warm pool when nobody holds anything."""
+        hosts already holding replicas of those keys are preferred: the
+        keys are **pinned** to holders by consistent hashing (rendezvous —
+        stable across batches, so a key's replica stays hot on one host)
+        and each call goes to the first pinned holder with capacity
+        (``has_capacity`` is re-read per call, so an over-capacity batch
+        spills down the pinned ranking instead of queueing blindly).  Only
+        when nobody holds anything does the batch fall back to
+        round-robining the warm pool."""
         if not calls:
             return
         if len(calls) == 1 and not state_hint:
@@ -521,19 +578,25 @@ class FaasmRuntime:
         if not pool:
             sched.register_warm(fn)          # batch cold-starts on the entry
             pool = [entry]
+        pinned = None
         if state_hint:
-            scored = [(h, sum(1 for k in state_hint if h.local_tier.has(k)))
-                      for h in pool]
-            holders = [h for h, score in
-                       sorted(scored, key=lambda t: t[1], reverse=True)
-                       if score > 0]
+            holders = [h for h in pool
+                       if any(h.local_tier.has(k) for k in state_hint)]
             if holders:
-                pool = holders
+                pinned = self._rank_holders(list(state_hint), holders)
         n = len(pool)
         for i, c in enumerate(calls):
             c.attempts += 1
+            if pinned is not None:
+                # first pinned holder with capacity; when every holder is
+                # saturated, round-robin the queueing across the holder set
+                # (locality kept) instead of piling on the top-ranked one
+                target = next((h for h in pinned if h.has_capacity()),
+                              pinned[i % len(pinned)])
+            else:
+                target = pool[i % n]
             try:
-                pool[i % n].submit(c)
+                target.submit(c)
             except Exception:
                 self._dispatch(c)            # full path: re-place or fail
 
@@ -772,6 +835,8 @@ class FaasmRuntime:
             "reset_pages": sum(h.reset_pages for h in self.hosts.values()),
             "reclaimed_pages": sum(h.reclaimed_pages
                                    for h in self.hosts.values()),
+            "retained_pages": sum(h.retained_pages
+                                  for h in self.hosts.values()),
         }
 
     def shutdown(self) -> None:

@@ -1,7 +1,9 @@
-from repro.kernels.state_push.ops import (apply_delta, dequantize, push,
-                                          quantize_delta, wire_nbytes)
+from repro.kernels.state_push.ops import (apply_delta, apply_pull, dequantize,
+                                          encode_pull, push, quantize_delta,
+                                          wire_nbytes)
 from repro.kernels.state_push.ref import (apply_delta_ref, push_ref,
                                           quantize_delta_ref)
 
-__all__ = ["apply_delta", "dequantize", "push", "quantize_delta",
-           "wire_nbytes", "apply_delta_ref", "push_ref", "quantize_delta_ref"]
+__all__ = ["apply_delta", "apply_pull", "dequantize", "encode_pull", "push",
+           "quantize_delta", "wire_nbytes", "apply_delta_ref", "push_ref",
+           "quantize_delta_ref"]

@@ -62,11 +62,15 @@ def wire_nbytes(q, scales) -> int:
     return int(q.size) + int(scales.size) * 4
 
 
-def apply_delta(global_val, q, scales, *, backend: str | None = None):
-    """Apply a compressed push to a value of any shape."""
+def _apply_wire(value, q, scales, backend: str | None):
+    """Shared decode/apply: ``value += q·scale`` (any shape), one fused pass.
+
+    The single home of the wire-apply dispatch for both directions —
+    :func:`apply_delta` (push: global buffer) and :func:`apply_pull`
+    (pull/broadcast: replica or device value)."""
     b = resolve_backend(backend)
-    shape, dtype = global_val.shape, global_val.dtype
-    gr, n = _to_rows(global_val)
+    shape, dtype = value.shape, value.dtype
+    gr, n = _to_rows(value)
     if b == "xla":
         out = _apply_ref(gr, q, scales)
     else:
@@ -74,6 +78,30 @@ def apply_delta(global_val, q, scales, *, backend: str | None = None):
                                  block_rows=_block_rows(gr.shape[0]),
                                  interpret=(b == "pallas_interpret"))
     return out.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def apply_delta(global_val, q, scales, *, backend: str | None = None):
+    """Apply a compressed push to a value of any shape."""
+    return _apply_wire(global_val, q, scales, backend)
+
+
+def encode_pull(new, base, *, backend: str | None = None):
+    """Pull-direction encode: quantise ``new − base`` (the delta a warm
+    replica at ``base`` needs to catch up to ``new``) with the same fused
+    quantise kernel the push wire uses.  Returns the ``(q, scales, numel)``
+    wire tuple — the symmetric twin of :func:`quantize_delta`."""
+    return quantize_delta(new, base, backend=backend)
+
+
+def apply_pull(value, q, scales, *, backend: str | None = None):
+    """Pull-direction decode/apply: ``replica += q·scale`` (any shape).
+
+    Applies a pulled (or peer-broadcast) wire tuple onto a replica value —
+    host- or device-resident — in one fused pass; the pad region quantises
+    to zero-delta so the trim is a no-op beyond ``numel``.  Same kernel as
+    :func:`apply_delta`, dispatched from the opposite side of the tier
+    boundary."""
+    return _apply_wire(value, q, scales, backend)
 
 
 def push(local, base, global_val, *, backend: str | None = None):

@@ -37,8 +37,10 @@ def make_infer_function(model, treedef, host_leaves, prompt_len: int = 16,
     With ``state_wire`` set, each request additionally accumulates the
     predicted token into the shared ``serve/stats`` histogram and pushes the
     delta with that wire format (``"int8"`` = the quantised
-    ``kernels/state_push`` path) — the stateful-serving traffic the wire
-    choice is about."""
+    ``kernels/state_push`` path; ``"auto"`` = the per-key adaptive
+    ``WirePolicy``) — the stateful-serving traffic the wire choice is
+    about.  The warm-replica refresh before each push rides the wire fabric
+    too: only the retained delta is pulled."""
     from repro.core import FunctionDef
 
     def _build_fwd():
@@ -138,9 +140,11 @@ def main():
                     help="also fan out N requests through the FAASM runtime "
                          "(invoke_many/wait_all batch path)")
     ap.add_argument("--faasm-hosts", type=int, default=1)
-    ap.add_argument("--state-wire", choices=("exact", "int8"), default=None,
+    ap.add_argument("--state-wire", choices=("auto", "exact", "int8"),
+                    default=None,
                     help="track shared serving stats through the state tier "
-                         "and push deltas with this wire format")
+                         "and move deltas with this wire format (auto = "
+                         "per-key adaptive WirePolicy)")
     args = ap.parse_args()
 
     if args.smoke:

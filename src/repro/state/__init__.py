@@ -1,8 +1,11 @@
 from repro.state.kv import GlobalTier, RWLock, DEFAULT_CHUNK
 from repro.state.local import LocalTier, Replica
+from repro.state.wire import (INT8_WIRE_MIN_BYTES, WIRES, WireFrame,
+                              WirePolicy, get_codec)
 from repro.state.ddo import (Counter, DistDict, MatrixReadOnly,
                              SparseMatrixReadOnly, VectorAsync)
 
 __all__ = ["GlobalTier", "RWLock", "DEFAULT_CHUNK", "LocalTier", "Replica",
-           "Counter", "DistDict", "MatrixReadOnly", "SparseMatrixReadOnly",
-           "VectorAsync"]
+           "INT8_WIRE_MIN_BYTES", "WIRES", "WireFrame", "WirePolicy",
+           "get_codec", "Counter", "DistDict", "MatrixReadOnly",
+           "SparseMatrixReadOnly", "VectorAsync"]

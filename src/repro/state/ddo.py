@@ -150,18 +150,30 @@ class VectorAsync:
         self._flush_if_copy()
         self.api.push_state_partial(self.key)
 
-    def push_delta(self, wire: str = "exact") -> None:
+    def push_delta(self, wire: str = "auto") -> None:
         """Accumulating push — concurrent pushes from different hosts compose.
 
-        ``wire="int8"`` ships the quantised ``kernels/state_push`` delta
-        (~¼ of the f32 bytes, error-feedback carried across pushes)."""
+        ``wire="auto"`` (default) lets the key's adaptive ``WirePolicy``
+        choose; ``"int8"`` forces the quantised ``kernels/state_push``
+        frame (~¼ of the f32 bytes, error-feedback carried across pushes)
+        and ``"exact"`` the f32 delta frame."""
         self._flush_if_copy()
         self.api.push_state_delta(self.key, dtype=np.float32, wire=wire)
 
-    def pull(self, track_delta: bool = False) -> None:
-        self.api.pull_state(self.key, track_delta=track_delta)
+    def pull(self, track_delta: bool = False, wire: str = None) -> None:
+        """Refresh the local view.  Warm replicas refresh through the wire
+        fabric (delta pull, ``wire`` as in :meth:`push_delta`); a replica
+        subscribed via :meth:`subscribe` is typically already current and
+        the pull moves zero bytes."""
+        self.api.pull_state(self.key, track_delta=track_delta, wire=wire)
         raw = self.api.get_state(self.key, writable=True)
         self._view = raw.view(np.float32)[:int(np.prod(self.shape))]
+
+    def subscribe(self) -> None:
+        """Subscribe the host replica to peer push fan-out (Cloudburst-style
+        push-based cache refresh): later pulls on this host are free unless
+        a broadcast was missed."""
+        self.api.subscribe_state(self.key)
 
 
 class DistDict:

@@ -18,10 +18,22 @@ primitives ``readinto``/``write_from`` memcpy directly between global
 storage and replica buffers under the stripe lock — no intermediate
 ``bytes`` materialisation.  ``add_inplace`` applies a HOGWILD delta
 (``global += local − base``) arithmetically in the global buffer without
-copying the value at all, and ``apply_quantized`` applies the int8
-``kernels/state_push`` wire format — the delta arrives as ``(q, scales)``
-and only those wire bytes (≈ value/4 for f32) are accounted as moved.  The
-tier counts every byte it actually memcpys
+copying the value at all.
+
+Wire fabric (``repro.state.wire``): every delta that crosses the tier
+boundary is a :class:`~repro.state.wire.WireFrame`.  ``apply_wire`` lands a
+push frame in the global buffer (int8 frames account only their **wire**
+bytes, ≈ value/4 for f32) and records it in the key's **retained delta
+window**; ``pull_wire`` serves a warm replica the composition of the
+retained frames newer than its base version (re-encoded on the requested
+wire by the fused ``kernels/state_push`` codec), falling back to a full
+pull when the base predates the window floor; ``broadcast`` fans an applied
+frame out to subscribed local tiers so peer replicas converge without a
+re-pull.  Any non-delta mutation (``set``/``set_range``/``write_from``/
+``append``/``rewrite``) invalidates the window: the floor jumps to the new
+version and older bases full-pull.
+
+The tier counts every byte it actually memcpys
 (``bytes_copied``/``total_copied``) next to the per-host transfer counters —
 the experiments' "network transfer" metric (Fig. 6b) reads the latter, the
 copy-accounting benchmark reads the former.
@@ -30,14 +42,18 @@ from __future__ import annotations
 
 import threading
 import zlib
-from collections import defaultdict
-from dataclasses import dataclass
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.state.wire import WireFrame, get_codec
+
 DEFAULT_CHUNK = 1 << 20          # 1 MiB state chunks
 DEFAULT_STRIPES = 64
+DEFAULT_DELTA_WINDOW = 8         # retained wire frames per key (delta pulls)
+DEFAULT_DELTA_WINDOW_BYTES = 32 << 20   # per-key byte cap on retained frames
 
 
 class RWLock:
@@ -80,6 +96,10 @@ class KeyMeta:
     """Per-key metadata co-located with the value in its stripe."""
 
     version: int = 0                 # stripe-monotonic; stamped on every write
+    floor: int = 0                   # oldest base version the window serves
+    frames: deque = field(default_factory=deque)   # retained WireFrames
+    frames_bytes: int = 0
+    pullers: set = field(default_factory=set)      # tiers holding warm replicas
 
 
 class _Value:
@@ -105,8 +125,8 @@ class _Value:
 class _Stripe:
     """One lock stripe: a mutex guarding a sub-map of keys + its counters."""
 
-    __slots__ = ("lock", "store", "meta", "locks", "vc", "pulled", "pushed",
-                 "copied")
+    __slots__ = ("lock", "store", "meta", "locks", "subs", "vc", "pulled",
+                 "pushed", "copied", "bcast")
 
     def __init__(self):
         self.lock = threading.RLock()
@@ -116,14 +136,41 @@ class _Stripe:
         # some thread is holding, and version numbers draw from a monotonic
         # per-stripe counter so delete+recreate never aliases a cached version
         self.locks: Dict[str, RWLock] = {}
+        self.subs: Dict[str, Dict[str, Callable]] = {}   # key -> host -> cb
         self.vc = 0
         self.pulled: Dict[str, int] = {}     # per-host transfer bytes
         self.pushed: Dict[str, int] = {}
         self.copied = 0                      # bytes actually memcpy'd by the tier
+        self.bcast = 0                       # wire bytes fanned out to peers
 
     def bump(self, key: str) -> None:
         self.vc += 1
         self.meta.setdefault(key, KeyMeta()).version = self.vc
+
+    def record(self, key: str, frame: WireFrame, window: int,
+               window_bytes: int) -> None:
+        """Retain an applied frame for delta pulls (stripe lock held).
+        Trimming the oldest frame raises the window floor to its version:
+        pulls from bases at or past the floor stay serviceable."""
+        m = self.meta[key]
+        m.frames.append(frame)
+        m.frames_bytes += frame.nbytes
+        while m.frames and (len(m.frames) > window
+                            or m.frames_bytes > window_bytes):
+            old = m.frames.popleft()
+            m.frames_bytes -= old.nbytes
+            m.floor = old.version
+
+    def invalidate(self, key: str) -> None:
+        """A non-delta mutation: the retained window can no longer express
+        the path from any older base — drop it and jump the floor to the
+        current version (stripe lock held)."""
+        m = self.meta.get(key)
+        if m is None:
+            return
+        m.frames.clear()
+        m.frames_bytes = 0
+        m.floor = m.version
 
 
 def _as_u8(a: np.ndarray) -> np.ndarray:
@@ -141,9 +188,13 @@ class GlobalTier:
     """
 
     def __init__(self, chunk_size: int = DEFAULT_CHUNK,
-                 n_stripes: int = DEFAULT_STRIPES):
+                 n_stripes: int = DEFAULT_STRIPES,
+                 delta_window: int = DEFAULT_DELTA_WINDOW,
+                 delta_window_bytes: int = DEFAULT_DELTA_WINDOW_BYTES):
         self.chunk_size = chunk_size
         self.n_stripes = max(1, n_stripes)
+        self.delta_window = max(0, delta_window)
+        self.delta_window_bytes = delta_window_bytes
         self._stripes = [_Stripe() for _ in range(self.n_stripes)]
 
     def _stripe(self, key: str) -> _Stripe:
@@ -174,6 +225,7 @@ class GlobalTier:
         with s.lock:
             s.store.pop(key, None)
             s.meta.pop(key, None)
+            s.subs.pop(key, None)
 
     def get(self, key: str, *, host: str = "?") -> bytes:
         s = self._stripe(key)
@@ -196,6 +248,7 @@ class GlobalTier:
             if n:
                 v.buf[:n] = np.frombuffer(value, np.uint8)
             s.bump(key)
+            s.invalidate(key)
             s.pushed[host] = s.pushed.get(host, 0) + n
             s.copied += n
 
@@ -211,6 +264,7 @@ class GlobalTier:
             if n:
                 v.buf[off:off + n] = np.frombuffer(value, np.uint8)
             s.bump(key)
+            s.invalidate(key)
             s.pushed[host] = s.pushed.get(host, 0) + n
             s.copied += n
 
@@ -234,6 +288,7 @@ class GlobalTier:
             if n:
                 v.buf[:n] = np.frombuffer(new, np.uint8)
             s.bump(key)
+            s.invalidate(key)
             s.copied += len(cur) + n
             return new, s.meta[key].version
 
@@ -269,19 +324,23 @@ class GlobalTier:
             if n:
                 v.buf[offset:offset + n] = np.frombuffer(value, np.uint8)
             s.bump(key)
+            s.invalidate(key)
             s.pushed[host] = s.pushed.get(host, 0) + n
             s.copied += n
 
     # -- zero-copy data plane (replica buffer <-> global buffer) --------------
 
     def readinto(self, key: str, offset: int, dest: np.ndarray, *,
-                 host: str = "?", clamp: bool = False) -> int:
+                 host: str = "?", clamp: bool = False,
+                 return_version: bool = False):
         """memcpy ``value[offset : offset+len(dest)]`` straight into ``dest``
         (a replica buffer view) under the stripe lock — one copy, no
         intermediate ``bytes``.  With ``clamp``, a read past the current
         value end copies what exists (a concurrent truncating push may have
         shrunk the value since the caller sized its buffer).  Returns bytes
-        moved."""
+        moved; with ``return_version``, ``(bytes, version)`` — the key's
+        write version captured atomically with the content, the base a
+        later delta pull refreshes from."""
         dest = _as_u8(dest)
         n = dest.size
         s = self._stripe(key)
@@ -296,6 +355,9 @@ class GlobalTier:
                 dest[:n] = v.buf[offset:offset + n]
             s.pulled[host] = s.pulled.get(host, 0) + n
             s.copied += n
+            if return_version:
+                m = s.meta.get(key)
+                return n, (m.version if m is not None else 0)
         return n
 
     def write_from(self, key: str, offset: int, src: np.ndarray, *,
@@ -317,18 +379,24 @@ class GlobalTier:
             if truncate:
                 v.length = offset + n
             s.bump(key)
+            s.invalidate(key)
             s.pushed[host] = s.pushed.get(host, 0) + n
             s.copied += n
         return n
 
     def add_inplace(self, key: str, local: np.ndarray,
                     base: Optional[np.ndarray] = None, *,
-                    host: str = "?") -> int:
+                    host: str = "?", return_version: bool = False):
         """HOGWILD delta push computed in place in the global buffer:
         ``global += local`` then ``global -= base`` — no value-sized copy at
         all (``bytes_copied`` does not move).  ``local``/``base`` are typed
         replica views; the overlap with the stored value is updated.
-        Returns delta bytes accounted as pushed."""
+        Returns delta bytes accounted as pushed; with ``return_version``,
+        ``(bytes, prev_version, version)`` — the version transition
+        captured atomically with the add, so the pusher can keep its
+        replica's base version current (its buffer *is* the post-push
+        content) instead of degrading every later warm pull to a full
+        re-pull."""
         dtype = local.dtype
         itemsize = dtype.itemsize
         s = self._stripe(key)
@@ -340,40 +408,235 @@ class GlobalTier:
                 g[:n] += local[:n]
                 if base is not None:
                     g[:n] -= base[:n]
+            m = s.meta.get(key)
+            prev = m.version if m is not None else 0
             s.bump(key)
+            # the delta was never materialised: older bases can't be served
+            # through the window across this write
+            s.invalidate(key)
             moved = n * itemsize
             s.pushed[host] = s.pushed.get(host, 0) + moved
+            if return_version:
+                return moved, prev, s.meta[key].version
         return moved
+
+    def apply_wire(self, key: str, frame: WireFrame, *,
+                   host: str = "?", origin: Optional[str] = None) -> int:
+        """Land a push-direction wire frame in the global buffer.
+
+        The frame decodes to a flat f32 delta; the overlap with the stored
+        value is accumulated in place.  Accounting counts the frame's
+        **wire** bytes (int8: payload + scales ≈ value/4 for f32; exact:
+        the f32 delta itself) — exact frames accumulate arithmetically and,
+        like :meth:`add_inplace`, add nothing to the memcpy accounting.
+
+        ``host`` is the transfer-metrics id; ``origin`` the pushing *tier*
+        (container tiers share a metrics host but are distinct fabric
+        parties — defaults to ``host``).
+
+        The frame is stamped with the version transition it performed
+        (``prev_version → version``) and — for f32 values, when some
+        *other* party has declared interest (a registered warm puller or a
+        subscriber) — retained in the key's delta window so warm replicas
+        can refresh via :meth:`pull_wire`.  With no interested party the
+        window is invalidated instead of fed: write-only keys retain
+        nothing.  Callers serialise under the key's global write lock and
+        fan the stamped frame out with :meth:`broadcast` *after* releasing
+        it."""
+        dt = np.dtype(frame.dtype)
+        delta = frame.decode()                   # numpy; outside no locks yet
+        wire = frame.nbytes
+        s = self._stripe(key)
+        with s.lock:
+            v = s.store[key]
+            g = v.buf[:v.length - v.length % dt.itemsize].view(dt)
+            n = min(g.size, frame.numel)
+            if n:
+                g[:n] += delta[:n].astype(dt, copy=False)
+            m = s.meta.get(key)
+            frame.prev_version = m.version if m is not None else 0
+            s.bump(key)
+            m = s.meta[key]
+            frame.version = m.version
+            frame.origin = origin if origin is not None else host
+            interested = (any(p != frame.origin for p in m.pullers)
+                          or any(h != frame.origin
+                                 for h in s.subs.get(key, ())))
+            if dt == np.float32 and self.delta_window > 0 and interested:
+                s.record(key, frame, self.delta_window,
+                         self.delta_window_bytes)
+            else:
+                s.invalidate(key)
+            s.pushed[host] = s.pushed.get(host, 0) + wire
+            if frame.wire != "exact":
+                s.copied += wire
+        return wire
 
     def apply_quantized(self, key: str, q: np.ndarray, scales: np.ndarray,
                         numel: int, *, dtype=np.float32,
                         host: str = "?") -> int:
         """Apply an int8-quantised delta push (the ``kernels/state_push``
-        wire format) in place in the global buffer.
+        wire tuple) — compatibility front over :meth:`apply_wire`."""
+        frame = WireFrame(wire="int8", numel=int(numel),
+                          payload=np.asarray(q),
+                          scales=np.asarray(scales, np.float32),
+                          dtype=np.dtype(dtype))
+        return self.apply_wire(key, frame, host=host)
 
-        ``q`` is the (rows, 128) int8 payload, ``scales`` the per-row f32
-        absmax scales, ``numel`` the original element count — the delta
-        decodes as ``q * scales`` trimmed to ``numel``.  Accounting counts
-        the **wire** bytes (int8 payload + scales), not the value bytes: a
-        4 MB f32 push moves ~1 MB + scales across the tier boundary.
-        Callers serialise under the key's global write lock, same as the
-        exact :meth:`add_inplace` path."""
-        q = np.asarray(q)
-        scales = np.asarray(scales, np.float32)
+    def pull_wire(self, key: str, base_version: int, *, wire: str = "int8",
+                  dtype=np.float32, residual: Optional[np.ndarray] = None,
+                  exclude_origin: Optional[str] = None,
+                  backend: Optional[str] = None, host: str = "?"):
+        """Delta pull: encode ``value(now) − value(at base_version)`` from
+        the key's retained window for a warm replica refresh.
+
+        ``exclude_origin`` names the pulling host: frames it pushed itself
+        are skipped from the composition — its buffer already contains
+        those deltas (in un-quantised form), so replaying them would
+        double-apply its own writes when its push raced a peer's.
+
+        Returns ``None`` when the pull is not serviceable (non-f32 value,
+        unknown base, base older than the window floor, or a gap) — the
+        caller falls back to a full pull.  Otherwise returns
+        ``(frame, version, residual)``: ``frame`` is ``None`` when the
+        replica is already current (0 bytes moved); ``residual`` is the
+        puller's updated error-feedback carry (quantisation debt of this
+        encode, owned by the pulling replica and threaded back in on its
+        next delta pull so repeated int8 refreshes converge)."""
         dt = np.dtype(dtype)
+        if dt != np.float32 or base_version < 0:
+            return None
         s = self._stripe(key)
         with s.lock:
-            v = s.store[key]
-            g = v.buf[:v.length - v.length % dt.itemsize].view(dt)
-            n = min(g.size, int(numel))
-            if n:
-                delta = (q.astype(np.float32) * scales).reshape(-1)[:n]
-                g[:n] += delta.astype(dt, copy=False)
-            s.bump(key)
-            wire = q.nbytes + scales.nbytes
-            s.pushed[host] = s.pushed.get(host, 0) + wire
-            s.copied += wire
-        return wire
+            m = s.meta.get(key)
+            if m is None:
+                return None
+            # a delta-pull attempt is interest: keep the window fed even if
+            # this one was too stale to serve
+            m.pullers.add(exclude_origin if exclude_origin is not None
+                          else host)
+            cur = m.version
+            if base_version == cur:
+                return None, cur, residual
+            if base_version > cur or base_version < m.floor:
+                return None
+            parts = [f for f in m.frames if f.version > base_version]
+            if not parts:
+                return None
+            served = [f for f in parts
+                      if exclude_origin is None or f.origin != exclude_origin]
+            if not served:
+                # every newer frame is the puller's own push: it is current
+                return None, cur, residual
+        # decode/compose and encode OUTSIDE the stripe lock: frames are
+        # immutable once stamped, and both the per-frame dequantise and the
+        # int8 re-encode (a fused-kernel dispatch) are full-value work that
+        # must not serialise unrelated keys in the stripe behind it
+        numel = max(f.numel for f in served)
+        delta = np.zeros(numel, np.float32)
+        for f in served:
+            d = f.decode()
+            delta[:d.size] += d
+        if residual is not None and residual.size == delta.size:
+            delta = delta + residual
+        frame = get_codec(wire).encode_delta(delta, backend=backend)
+        new_residual = None
+        if frame.wire != "exact":
+            new_residual = delta - frame.decode()
+        frame.prev_version, frame.version = base_version, cur
+        with s.lock:
+            s.pulled[host] = s.pulled.get(host, 0) + frame.nbytes
+            s.copied += frame.nbytes
+        return frame, cur, new_residual
+
+    def register_puller(self, key: str, origin: str) -> None:
+        """Declare ``origin`` (a tier id) as holding a warm full replica of
+        ``key``: from now on applied f32 frames are retained in the delta
+        window so its refreshes can ride the wire.  Sticky for the key's
+        lifetime (cluster-bounded set); the first refresh after interest is
+        declared may still full-pull once while the window warms."""
+        s = self._stripe(key)
+        with s.lock:
+            s.meta.setdefault(key, KeyMeta()).pullers.add(origin)
+
+    def deregister_puller(self, origin: str,
+                          key: Optional[str] = None) -> None:
+        """Revoke ``origin``'s warm-puller interest for ``key`` (all keys
+        when ``None`` — replica eviction/host failure), so write-only keys
+        stop materialising and retaining frames once every consumer left."""
+        stripes = [self._stripe(key)] if key is not None else self._stripes
+        for s in stripes:
+            with s.lock:
+                metas = ([s.meta[key]] if key is not None and key in s.meta
+                         else ([] if key is not None else s.meta.values()))
+                for m in metas:
+                    m.pullers.discard(origin)
+
+    def wire_interest(self, key: str, exclude: Optional[str] = None) -> bool:
+        """True when some party other than ``exclude`` consumes this key's
+        wire frames (a registered warm puller or a broadcast subscriber) —
+        the signal `LocalTier.push_delta` uses to decide whether an exact
+        f32 push is worth materialising as a frame at all."""
+        s = self._stripe(key)
+        with s.lock:
+            m = s.meta.get(key)
+            if m is not None and any(p != exclude for p in m.pullers):
+                return True
+            return any(h != exclude for h in s.subs.get(key, ()))
+
+    # -- peer broadcast (subscribed replicas) ---------------------------------
+
+    def subscribe(self, key: str, host_id: str,
+                  callback: Callable[[str, WireFrame], None]) -> None:
+        """Register ``callback(key, frame)`` to receive every wire frame
+        applied to ``key`` (push fan-out).  One subscription per host id;
+        re-subscribing replaces the callback."""
+        s = self._stripe(key)
+        with s.lock:
+            s.subs.setdefault(key, {})[host_id] = callback
+
+    def unsubscribe(self, host_id: str, key: Optional[str] = None) -> None:
+        """Drop ``host_id``'s subscription for ``key`` (all keys when
+        ``None`` — host eviction/failure)."""
+        stripes = [self._stripe(key)] if key is not None else self._stripes
+        for s in stripes:
+            with s.lock:
+                if key is not None:
+                    subs = [s.subs[key]] if key in s.subs else []
+                else:
+                    subs = list(s.subs.values())
+                for d in subs:
+                    d.pop(host_id, None)
+
+    def broadcast(self, key: str, frame: WireFrame, *,
+                  exclude: Optional[str] = None) -> int:
+        """Fan an applied (version-stamped) wire frame out to every
+        subscriber of ``key`` except ``exclude`` (the pusher, whose replica
+        already contains the delta).  Returns subscribers reached.
+
+        Must be called with **no tier locks held**: callbacks take replica
+        locks on the receiving side.  A callback that raises (subscriber
+        churn — e.g. its host died mid-broadcast) is dropped from the list;
+        the remaining subscribers still receive the frame, and a returning
+        host repairs itself through the delta-pull path."""
+        s = self._stripe(key)
+        with s.lock:
+            targets = [(h, cb) for h, cb in s.subs.get(key, {}).items()
+                       if h != exclude]
+        delivered = 0
+        for h, cb in targets:
+            try:
+                cb(key, frame)
+                delivered += 1
+            except Exception:
+                with s.lock:
+                    d = s.subs.get(key)
+                    if d is not None and d.get(h) is cb:
+                        d.pop(h, None)
+        if delivered:
+            with s.lock:
+                s.bcast += delivered * frame.nbytes
+        return delivered
 
     def n_chunks(self, key: str) -> int:
         sz = self.size(key)
@@ -435,9 +698,19 @@ class GlobalTier:
                 total += s.copied
         return total
 
+    def total_broadcast(self) -> int:
+        """Wire bytes fanned out to peer subscribers (push-side paid; peer
+        replicas converge without adding to ``bytes_pulled``)."""
+        total = 0
+        for s in self._stripes:
+            with s.lock:
+                total += s.bcast
+        return total
+
     def reset_metrics(self) -> None:
         for s in self._stripes:
             with s.lock:
                 s.pulled.clear()
                 s.pushed.clear()
                 s.copied = 0
+                s.bcast = 0

@@ -19,14 +19,30 @@ replica's write version — every host-side mutation (``mark_dirty``, pull)
 bumps ``Replica.version``; the device copy records the version it was
 synced at, so a stale device array is never silently pushed.
 
-Quantised push wire: ``push_delta(..., wire="int8")`` runs the fused
-``kernels/state_push`` quantise kernel on the pusher (device-native when a
-fresh :class:`DeviceReplica` is bound — the value never round-trips through
-host buffers), ships the ``(q, scales, numel)`` wire tuple, and the global
-tier applies it via :meth:`GlobalTier.apply_quantized` — an f32 push moves
-~¼ of the exact-path bytes.  Per-replica **error feedback** carries the
-quantisation residual into the next push so repeated int8 pushes don't
-accumulate bias; sub-threshold values fall back to the exact in-place path.
+Symmetric wire fabric (``repro.state.wire``): every delta crossing the tier
+boundary is a :class:`~repro.state.wire.WireFrame` encoded by a
+:class:`~repro.state.wire.WireCodec` — identically in both directions.
+
+  * **Push** — ``push_delta(wire="int8")`` runs the fused
+    ``kernels/state_push`` quantise kernel on the pusher (device-native when
+    a fresh :class:`DeviceReplica` is bound — the value never round-trips
+    through host buffers) and the global tier lands the frame via
+    :meth:`GlobalTier.apply_wire` (~¼ of the f32 bytes).  Exact f32 pushes
+    travel as exact frames so they too are recorded/broadcast.  Per-replica
+    **error feedback** carries the quantisation residual into the next push.
+  * **Pull** — a warm replica that knows its base version refreshes through
+    :meth:`GlobalTier.pull_wire`: only the retained delta ships (int8 ≈ ¼
+    of a full f32 re-pull), with a full-pull fallback when the base
+    predates the retained window; the pull-side residual is owned by the
+    pulling replica.
+  * **Broadcast** — a :meth:`subscribe`\\ d replica receives every frame a
+    peer pushes and applies it in place (host buffer, delta base, fresh
+    device arrays via ``ops.apply_pull``), converging with zero pull bytes.
+
+``wire="auto"`` (or ``None``) delegates the choice to the key's
+:class:`~repro.state.wire.WirePolicy` — adaptive int8-vs-exact selection
+from observed delta magnitude/density and residual norm, with flip-flop
+damping; explicit ``wire=`` strings remain as overrides.
 """
 from __future__ import annotations
 
@@ -37,25 +53,18 @@ from typing import Any, Dict, Optional, Set
 import numpy as np
 
 from repro.state.kv import GlobalTier, RWLock
+from repro.state.wire import (INT8_WIRE_MIN_BYTES, WireFrame, WirePolicy,
+                              get_codec)
 
-# Values smaller than this push exact even when wire="int8" is requested:
-# the per-row scales + dispatch overhead eat the 4x payload saving on tiny
-# values, and the exact in-place path moves zero value bytes anyway.
-INT8_WIRE_MIN_BYTES = 4096
+__all__ = ["DeviceReplica", "INT8_WIRE_MIN_BYTES", "LocalTier", "Replica"]
 
 
-def _encode_delta(eff, base, backend):
-    """Quantise ``eff − base`` to the int8 wire and compute the
-    error-feedback residual (what the quantisation dropped, carried into the
-    next push).  Array-namespace agnostic: numpy or jax arrays in; the wire
-    tuple and residual come back as jax arrays — the single home of the
-    feedback math for both the host and device push branches."""
-    from repro.kernels.state_push import ops
-
-    q, s, n = ops.quantize_delta(eff, base, backend=backend)
-    deq = ops.dequantize(q, s, n)
-    residual = (eff - base).reshape(-1)[:n] - deq
-    return q, s, n, residual
+def _mean_abs(x) -> float:
+    """Mean |x| as a python float; works for numpy and jax arrays (a jax
+    input syncs only the scalar, not the array)."""
+    if x is None or getattr(x, "size", 0) == 0:
+        return 0.0
+    return float(abs(x).mean())
 
 
 @dataclass
@@ -95,6 +104,12 @@ class Replica:
     version: int = 0                     # bumped on every host-side mutation
     residual: Optional[np.ndarray] = None  # f32 error-feedback carry (int8 wire)
     device: Optional[DeviceReplica] = None
+    # wire-fabric state: the global write version this replica's content
+    # incorporates (-1 = unknown, e.g. locally fabricated via set_state —
+    # such replicas keep the legacy never-refresh semantics), and the
+    # pull-direction error-feedback carry (owned by the pulling replica)
+    global_version: int = -1
+    pull_residual: Optional[np.ndarray] = None
 
 
 class LocalTier:
@@ -103,7 +118,15 @@ class LocalTier:
     def __init__(self, host_id: str, global_tier: GlobalTier):
         self.host_id = host_id
         self.global_tier = global_tier
+        # fabric identity: host_id may later be re-pointed at the physical
+        # host for transfer metrics (container tiers charge the host), but
+        # frames must be attributed to THIS tier — sibling container tiers
+        # sharing a metrics id must not skip each other's frames on pull or
+        # collide on one broadcast subscription slot
+        self.origin_id = host_id
         self._replicas: Dict[str, Replica] = {}
+        self._policies: Dict[str, WirePolicy] = {}
+        self._subscribed: Set[str] = set()
         self._mutex = threading.RLock()
 
     # -- replica lifecycle ------------------------------------------------------
@@ -129,12 +152,19 @@ class LocalTier:
             return key in self._replicas
 
     def drop(self, key: Optional[str] = None) -> None:
-        """Evict replicas (host failure / memory pressure)."""
+        """Evict replicas (host failure / memory pressure).  Any broadcast
+        subscriptions and warm-puller registrations for the dropped keys
+        are cancelled — a host that leaves mid-broadcast stops receiving
+        frames, and pushers stop retaining window frames for it."""
         with self._mutex:
             if key is None:
                 self._replicas.clear()
+                self._subscribed.clear()
             else:
                 self._replicas.pop(key, None)
+                self._subscribed.discard(key)
+        self.global_tier.unsubscribe(self.origin_id, key)
+        self.global_tier.deregister_puller(self.origin_id, key)
 
     def memory_bytes(self) -> int:
         with self._mutex:
@@ -258,28 +288,196 @@ class LocalTier:
             return True
         return not d.device_dirty and d.synced_version != r.version
 
+    # -- wire policy / broadcast subscription -----------------------------------
+
+    def wire_policy(self, key: str) -> WirePolicy:
+        """The key's adaptive wire selector (shared by push and pull)."""
+        with self._mutex:
+            p = self._policies.get(key)
+            if p is None:
+                p = self._policies[key] = WirePolicy()
+            return p
+
+    def subscribe(self, key: str) -> int:
+        """Subscribe this tier's replica to the key's push fan-out: every
+        wire frame another host applies to the global value is delivered and
+        applied in place (host buffer, delta base, fresh device arrays), so
+        the warm replica converges with **zero pull bytes**.  Returns the
+        bytes the initial sync pulled.
+
+        The callback registers *before* the initial pull: a frame pushed in
+        between is either already inside the pulled content (the pull
+        captures value+version atomically) or arrives with a version that
+        chains onto it — registering after the pull would lose any frame
+        landing in the gap and leave every later one skipped on the version
+        check.  Early deliveries against the not-yet-pulled replica are
+        version-mismatched no-ops."""
+        self.replica(key, self.global_tier.size(key))
+        with self._mutex:
+            self._subscribed.add(key)
+        self.global_tier.subscribe(key, self.origin_id, self._deliver)
+        return self.pull(key)
+
+    def unsubscribe(self, key: Optional[str] = None) -> None:
+        with self._mutex:
+            if key is None:
+                self._subscribed.clear()
+            else:
+                self._subscribed.discard(key)
+        self.global_tier.unsubscribe(self.origin_id, key)
+
+    def _deliver(self, key: str, frame: WireFrame) -> None:
+        """Broadcast delivery: apply when the frame extends exactly this
+        replica's version; anything else (gap from a missed frame, an
+        out-of-order race between two pushers, a duplicate) is skipped —
+        the next pull repairs it through the delta window.  Raising (e.g.
+        the replica was evicted) drops the subscription tier-side."""
+        with self._mutex:
+            r = self._replicas.get(key)
+        if r is None:
+            raise KeyError(f"replica {key!r} evicted")
+        r.lock.acquire_write()
+        try:
+            if frame.prev_version != r.global_version:
+                return
+            self._apply_frame_locked(r, frame)
+        finally:
+            r.lock.release_write()
+
+    def _apply_frame_locked(self, r: Replica, frame: WireFrame, *,
+                            backend: Optional[str] = None,
+                            set_version: Optional[int] = None) -> None:
+        """Apply a wire frame to the replica (write lock held): the host
+        buffer, the delta base (the global tier already holds this delta —
+        without the base update the next ``push_delta`` would re-push it),
+        and a fresh device replica's arrays, so a device-native push keeps
+        diffing against content the global tier has seen."""
+        delta = frame.decode()
+        dt = np.dtype(frame.dtype)
+        # the frame names the value dtype it applies to: viewing the buffer
+        # as anything else would scramble e.g. an f64 key's bytes
+        fv = r.buf[:r.buf.size - r.buf.size % dt.itemsize].view(dt)
+        n = min(fv.size, delta.size)
+        if n:
+            fv[:n] += delta[:n].astype(dt, copy=False)
+        if r.base is not None and r.base.size >= dt.itemsize:
+            bv = r.base[:r.base.size - r.base.size % dt.itemsize].view(dt)
+            m = min(bv.size, delta.size)
+            if m:
+                bv[:m] += delta[:m].astype(dt, copy=False)
+        d = r.device
+        was_fresh = d is not None and d.value is not None and d.fresh(r)
+        if was_fresh:
+            import jax.numpy as jnp
+            k = min(int(d.value.size), delta.size)
+            if k:
+                if frame.wire == "int8" and int(d.value.size) == frame.numel:
+                    from repro.kernels.state_push import ops
+                    d.value = ops.apply_pull(d.value, frame.payload,
+                                             frame.scales, backend=backend)
+                else:
+                    upd = jnp.asarray(delta[:k]).astype(d.value.dtype)
+                    d.value = d.value.at[:k].add(upd)
+                if d.base is not None:
+                    kb = min(int(d.base.size), delta.size)
+                    ub = jnp.asarray(delta[:kb]).astype(d.base.dtype)
+                    d.base = d.base.at[:kb].add(ub)
+        r.version += 1
+        if was_fresh and not d.device_dirty:
+            d.synced_version = r.version
+        r.global_version = frame.version if set_version is None \
+            else set_version
+
     # -- pull / push (tier synchronisation) ----------------------------------------
 
-    def pull(self, key: str) -> int:
-        """Ensure the full value is replicated locally.  Returns bytes moved
-        (0 on a local hit) — symmetric with :meth:`push`."""
+    def pull(self, key: str, *, wire: Optional[str] = None,
+             backend: Optional[str] = None) -> int:
+        """Ensure the replica holds the current global value.  Returns bytes
+        moved (0 on an up-to-date replica) — symmetric with :meth:`push`.
+
+        Cold replicas full-pull as before.  A replica that already holds
+        the full value and knows its base version **refreshes through the
+        wire fabric**: the global tier ships only the retained delta
+        (``wire="int8"`` re-encodes it with the fused ``kernels/state_push``
+        quantise kernel, ~¼ of the f32 re-pull bytes; ``wire=None``/"auto"
+        lets the key's :class:`WirePolicy` decide; ``wire="exact"`` ships
+        the f32 delta), falling back to a full pull when the base predates
+        the retained delta window.  Pull-side quantisation error is carried
+        per replica as an error-feedback residual into the next delta pull."""
         size = self.global_tier.size(key)
         r = self.replica(key, size)
         moved = 0
         r.lock.acquire_write()
         try:
             if not r.full:
-                if size:
-                    moved = self.global_tier.readinto(key, 0, r.buf[:size],
-                                                      host=self.host_id,
-                                                      clamp=True)
+                moved = self._full_pull_locked(key, r, size)
                 r.full = True
                 r.present_chunks = set(range(self.global_tier.n_chunks(key)))
-                if moved:
-                    r.version += 1
+            elif r.global_version >= 0:
+                moved = self._refresh_locked(key, r, size, wire, backend)
         finally:
             r.lock.release_write()
         return moved
+
+    def _full_pull_locked(self, key: str, r: Replica, size: int, *,
+                          refresh_base: bool = False) -> int:
+        """Whole-value pull (replica write lock held): one ``readinto``
+        memcpy, base version captured atomically with the content.
+
+        ``refresh_base`` (the warm-refresh fallback) re-stamps the delta
+        base from the pulled buffer: the buffer now *is* the global value,
+        so the base must say the global tier has seen it — otherwise the
+        next ``push_delta`` would re-push every peer write since the old
+        snapshot.  The cold path keeps the legacy leave-the-base semantics
+        (callers re-arm with ``track_delta``/``snapshot_base``)."""
+        moved = 0
+        if size:
+            moved, ver = self.global_tier.readinto(
+                key, 0, r.buf[:size], host=self.host_id, clamp=True,
+                return_version=True)
+        else:
+            ver = self.global_tier.version(key)
+        # a warm full replica is a future delta-puller: declare interest so
+        # pushers start feeding the key's retained window
+        self.global_tier.register_puller(key, self.origin_id)
+        r.global_version = ver
+        r.pull_residual = None
+        if moved:
+            r.version += 1
+            if refresh_base and r.base is not None:
+                self._refresh_base(r)
+        return moved
+
+    def _refresh_locked(self, key: str, r: Replica, size: int,
+                        wire: Optional[str],
+                        backend: Optional[str]) -> int:
+        """Warm-replica refresh (replica write lock held): delta pull
+        through the wire fabric, full-pull fallback on a stale base."""
+        w = wire
+        if w in (None, "auto"):
+            w = self.wire_policy(key).select(r.buf.size,
+                                             np.dtype(np.float32),
+                                             probe=False)
+        res = self.global_tier.pull_wire(
+            key, r.global_version, wire=w, residual=r.pull_residual,
+            exclude_origin=self.origin_id, backend=backend,
+            host=self.host_id)
+        if res is None:
+            # base older than the window floor (or non-delta writes landed):
+            # the delta path can't express the catch-up.  With un-pushed
+            # local writes pending, a full pull would clobber them — keep
+            # the legacy warm no-op (the replica refreshes after its push);
+            # a clean replica full-pulls and re-bases.
+            if r.dirty_chunks:
+                return 0
+            return self._full_pull_locked(key, r, size, refresh_base=True)
+        frame, ver, residual = res
+        if frame is None:
+            r.global_version = ver
+            return 0
+        self._apply_frame_locked(r, frame, backend=backend, set_version=ver)
+        r.pull_residual = residual
+        return frame.nbytes
 
     def pull_chunk(self, key: str, chunk_idx: int) -> int:
         """Replicate a single state chunk (Fig. 4: partial values).
@@ -397,31 +595,48 @@ class LocalTier:
         hosts compose instead of overwriting.  Runs under the key's global
         write lock.  Returns bytes moved.
 
-        ``wire="exact"`` (default) accumulates *in place in the global
-        buffer* — no full-value copy on this path.  ``wire="int8"`` runs the
-        fused ``kernels/state_push`` quantise kernel on the pusher — from
-        the device arrays when a fresh :class:`DeviceReplica` is bound, so
+        ``wire`` selects the codec: ``"int8"`` runs the fused
+        ``kernels/state_push`` quantise kernel on the pusher — from the
+        device arrays when a fresh :class:`DeviceReplica` is bound, so
         device-resident values never round-trip through host buffers — and
-        ships the int8+scales wire tuple (~¼ of the f32 bytes), applied
-        globally via :meth:`GlobalTier.apply_quantized`.  Quantisation error
-        is carried per replica as an error-feedback residual into the next
-        push; float values smaller than ``INT8_WIRE_MIN_BYTES`` (and
-        non-float dtypes) fall back to the exact path.
+        ships the int8+scales frame (~¼ of the f32 bytes) with per-replica
+        error feedback; ``"exact"`` (default) ships the f32 delta frame (f32
+        values) or accumulates in place (other dtypes).  ``"auto"``/``None``
+        delegates to the key's :class:`WirePolicy`.  Float values smaller
+        than ``INT8_WIRE_MIN_BYTES`` (and non-float dtypes) always take the
+        exact path.
+
+        Applied f32 frames are recorded in the key's retained delta window
+        (feeding warm-replica delta pulls) and fanned out to subscribed
+        peer replicas once the global lock is released.
 
         Locking: both wires take the replica write lock first (same-replica
-        pushes are atomic — read, encode/add, base refresh) and the key's
-        global write lock second.  The int8 encode — the expensive kernel
+        pushes are atomic — read, encode, base refresh) and the key's
+        global write lock second.  The encode — the expensive kernel
         dispatch — runs *before* the global lock is taken, so concurrent
         pushers of the same key from different hosts pipeline their encodes
-        and only the cheap wire apply serialises."""
-        if wire not in ("exact", "int8"):
-            raise ValueError(f"wire {wire!r} not in ('exact', 'int8')")
+        and only the cheap wire apply serialises.  Broadcast fan-out runs
+        with no locks held."""
         r = self._replicas[key]
         gt = self.global_tier
         dt = np.dtype(dtype)
+        auto = wire in (None, "auto")
+        if auto:
+            wire = self.wire_policy(key).select(r.buf.size, dt)
+        if wire not in ("exact", "int8"):
+            raise ValueError(f"wire {wire!r} not in ('exact', 'int8', 'auto')")
         if (wire == "int8" and dt.kind == "f"
                 and r.buf.size >= INT8_WIRE_MIN_BYTES):
-            return self._push_delta_int8(key, r, dt, backend)
+            return self._push_delta_int8(key, r, dt, backend, auto=auto)
+        if (dt == np.float32 and gt.delta_window > 0
+                and gt.wire_interest(key, exclude=self.origin_id)):
+            return self._push_delta_exact_f32(key, r, backend, auto=auto)
+        # non-f32 dtypes — and f32 nobody else consumes frames of (no warm
+        # puller, no subscriber) or with the window disabled: the zero-copy
+        # fast path.  No frame is materialised, nothing retained; the tier
+        # invalidates the key's window.  The first consumer to appear
+        # full-pulls once and declares interest, flipping later pushes onto
+        # the frame path.
         r.lock.acquire_write()
         try:
             local = r.buf.view(dt)
@@ -430,25 +645,99 @@ class LocalTier:
             lock = gt.lock(key)
             lock.acquire_write()
             try:
-                moved = gt.add_inplace(key, local, base, host=self.host_id)
+                moved, prev, new = gt.add_inplace(
+                    key, local, base, host=self.host_id,
+                    return_version=True)
             finally:
                 lock.release_write()
             self._refresh_base(r)
             r.dirty_chunks.clear()
+            # the pusher's buffer is the post-push content: keep its base
+            # version current (same rule as _after_push) so its own warm
+            # pulls stay 0-byte no-ops instead of full re-pulls
+            if r.global_version == prev:
+                r.global_version = new
             return moved
         finally:
             r.lock.release_write()
 
+    def _push_delta_exact_f32(self, key: str, r: Replica,
+                              backend: Optional[str], *,
+                              auto: bool = False) -> int:
+        """Exact f32 push as a wire frame: the delta is materialised once,
+        accumulated in place in the global buffer, retained in the key's
+        delta window and broadcast to subscribed peers.  Any error-feedback
+        residual is flushed into the frame — the exact wire pays
+        quantisation debt in full.
+
+        Like the int8 path, a fresh :class:`DeviceReplica` is pushed from
+        its device arrays (device-side updates must not be silently dropped
+        when the policy routes a device-resident key onto the exact wire);
+        the exact wire ships f32 either way, so the D2H of the delta is the
+        wire payload itself."""
+        gt = self.global_tier
+        codec = get_codec("exact")
+        r.lock.acquire_write()
+        try:
+            d = r.device
+            if d is not None and d.fresh(r):
+                local = np.asarray(d.value, dtype=np.float32).reshape(-1)
+                if d.base is not None:
+                    base = np.asarray(d.base,
+                                      dtype=np.float32).reshape(-1)
+                else:
+                    base = self._base_f32(r, np.dtype(np.float32),
+                                          local.size)
+                eff = local
+                if d.residual is not None:
+                    eff = local + np.asarray(d.residual, np.float32)
+                    d.residual = None        # exact wire pays the debt
+                frame, _ = codec.encode(eff, base, backend=backend)
+                d.base = d.value             # device snapshot: a rebind
+                host_synced = not d.device_dirty
+            else:
+                local = r.buf.view(np.float32)
+                base = self._base_f32(r, np.dtype(np.float32), local.size)
+                eff = local
+                if r.residual is not None and r.residual.size == local.size:
+                    eff = local + r.residual
+                    r.residual = None
+                frame, _ = codec.encode(eff, base, backend=backend)
+                host_synced = True
+            if host_synced:
+                self._refresh_base(r)
+                r.dirty_chunks.clear()
+        finally:
+            r.lock.release_write()
+        lock = gt.lock(key)
+        lock.acquire_write()
+        try:
+            moved = gt.apply_wire(key, frame, host=self.host_id,
+                                  origin=self.origin_id)
+        finally:
+            lock.release_write()
+        self._after_push(key, r, frame)
+        if auto:
+            # adaptive feedback only when the policy made the choice: forced
+            # pushes skip the two extra full-array metric passes
+            delta = frame.payload
+            self.wire_policy(key).observe(
+                delta_absmax=float(np.abs(delta).max()) if delta.size else 0.0,
+                density=float(np.count_nonzero(delta)) / max(delta.size, 1))
+        return moved
+
     def _push_delta_int8(self, key: str, r: Replica, dt: np.dtype,
-                         backend: Optional[str]) -> int:
+                         backend: Optional[str], *,
+                         auto: bool = False) -> int:
         """Quantised delta push: encode under the replica write lock, apply
-        under the key's global write lock.
+        under the key's global write lock, broadcast with no locks held.
 
         Device-native when the replica has a fresh device copy: quantise
-        runs on ``DeviceReplica.value``/``base`` and only the wire tuple
+        runs on ``DeviceReplica.value``/``base`` and only the wire frame
         comes back to the host.  Otherwise the host replica buffer feeds the
         kernel directly."""
         gt = self.global_tier
+        codec = get_codec("int8")
         r.lock.acquire_write()
         try:
             d = r.device
@@ -468,7 +757,10 @@ class LocalTier:
                 eff = local.astype(jnp.float32)
                 if d.residual is not None:
                     eff = eff + d.residual
-                q, s, n, residual = _encode_delta(eff, base, backend)
+                # codec.encode materialises the frame (np.asarray blocks on
+                # the dispatched kernels), so nothing in flight still reads
+                # r.base when _refresh_base mutates it below
+                frame, residual = codec.encode(eff, base, backend=backend)
                 d.residual = residual
                 d.base = local               # device snapshot: a rebind
                 # d.value mirrors the host buffer only when no device-side
@@ -484,14 +776,12 @@ class LocalTier:
                 if r.residual is None or r.residual.size != local.size:
                     r.residual = np.zeros(local.size, np.float32)
                 eff = local.astype(np.float32) + r.residual
-                q, s, n, residual = _encode_delta(eff, base, backend)
+                frame, residual = codec.encode(eff, base, backend=backend)
                 # owned writable copy: np.asarray of a jax array is read-only
                 # and would alias the device buffer
                 r.residual = np.array(residual, dtype=np.float32)
                 host_synced = True
-            # np.asarray blocks on the dispatched kernels, so nothing
-            # in flight still reads r.base when _refresh_base mutates it
-            q, s = np.asarray(q), np.asarray(s)
+            frame.dtype = dt
             if host_synced:
                 self._refresh_base(r)
                 r.dirty_chunks.clear()
@@ -500,10 +790,39 @@ class LocalTier:
         lock = gt.lock(key)
         lock.acquire_write()
         try:
-            return gt.apply_quantized(key, q, s, n, dtype=dt,
-                                      host=self.host_id)
+            moved = gt.apply_wire(key, frame, host=self.host_id,
+                                  origin=self.origin_id)
         finally:
             lock.release_write()
+        self._after_push(key, r, frame)
+        if auto:
+            # adaptive feedback (policy-chosen pushes only): what the
+            # quantisation dropped vs what it carried.  Carried mass is
+            # derived from the wire tuple itself (per-row mean|q|·scale),
+            # not a second full f32 decode of the frame.
+            q, sc = frame.payload, frame.scales
+            carried = float((np.abs(q).mean(axis=1)
+                             * sc[:, 0]).mean()) if q.size else 0.0
+            self.wire_policy(key).observe(
+                delta_absmax=(float(sc.max()) * 127.0
+                              if sc is not None and sc.size else 0.0),
+                density=float(np.count_nonzero(q)) / max(q.size, 1),
+                residual_ratio=_mean_abs(residual) / (carried + 1e-12))
+        return moved
+
+    def _after_push(self, key: str, r: Replica, frame: WireFrame) -> None:
+        """Post-apply bookkeeping: advance the replica's global base version
+        when the push extended exactly the version it last synced at (any
+        other transition means peer pushes landed that this replica hasn't
+        seen — its version stays put and the next pull delta-refreshes),
+        then fan the stamped frame out to subscribed peers."""
+        r.lock.acquire_write()
+        try:
+            if r.global_version == frame.prev_version:
+                r.global_version = frame.version
+        finally:
+            r.lock.release_write()
+        self.global_tier.broadcast(key, frame, exclude=self.origin_id)
 
     def mark_dirty(self, key: str, offset: int, length: int) -> None:
         r = self._replicas[key]

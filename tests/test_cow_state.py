@@ -322,13 +322,84 @@ def test_reset_reclaims_dirty_pages_via_madvise():
     assert bytes(f.read(f.memory_limit - WASM_PAGE, 16)) == bytes(16)
 
 
-def test_runtime_reset_reports_reclaimed_pages():
-    """End-to-end: a warm call that dirties private memory on an mmap-CoW
-    Faaslet shows up in the host reclaimed_pages metric."""
+def test_reset_reclaim_never_retains_pages():
+    """``reclaim="never"`` re-stamps dirty pages in place: content is
+    restored, nothing is madvise'd back, ``retained_pages`` counts them."""
+    pages = EAGER_COPY_MAX_BYTES // WASM_PAGE + 4
+    proto = _make_proto(pages * WASM_PAGE)
+    f, _ = proto.restore("h0")
+    f.write(2 * WASM_PAGE + 5, b"scratch")
+    n = f.reset_from_base(reclaim="never")
+    assert n >= 1
+    assert f.reclaimed_pages == 0
+    assert f.retained_pages >= 1
+    assert bytes(f.read(2 * WASM_PAGE, 8)) == b"\xab" * 8
+
+
+def test_reset_reclaim_auto_follows_pressure():
+    """``reclaim="auto"`` retains without pressure (hot Faaslet stays
+    refault-free) and reclaims under pressure (mmap path)."""
+    pages = EAGER_COPY_MAX_BYTES // WASM_PAGE + 4
+    proto = _make_proto(pages * WASM_PAGE)
+    f, _ = proto.restore("h0")
+    f.write(0, b"hot")
+    f.reset_from_base(reclaim="auto", pressure=False)
+    assert f.reclaimed_pages == 0 and f.retained_pages >= 1
+    retained0 = f.retained_pages
+    f.write(0, b"cold")
+    f.reset_from_base(reclaim="auto", pressure=True)
+    if f._mm is not None and hasattr(__import__("mmap"), "MADV_DONTNEED"):
+        assert f.reclaimed_pages >= 1
+        assert f.retained_pages == retained0
+    assert bytes(f.read(0, 4)) == b"\xab" * 4
+    with pytest.raises(ValueError):
+        f.reset_from_base(reclaim="bogus")
+
+
+def test_runtime_reset_splits_reclaimed_and_retained():
+    """End-to-end metric split: an "always" runtime reports reclaimed
+    pages, a "never" runtime reports the same work as retained."""
     import mmap as _mmap
     if not hasattr(_mmap, "MADV_DONTNEED"):
         pytest.skip("madvise unavailable")
-    rt = FaasmRuntime(n_hosts=1)
+
+    def run(reclaim):
+        rt = FaasmRuntime(n_hosts=1, reclaim=reclaim)
+        try:
+            def init(api):
+                api.brk(EAGER_COPY_MAX_BYTES + 2 * WASM_PAGE)
+                return None
+
+            def touch_mem(api):
+                api.sbrk(WASM_PAGE)
+                return 0
+
+            rt.upload(FunctionDef("touch_mem", touch_mem, init_fn=init,
+                                  memory_limit=4 * EAGER_COPY_MAX_BYTES))
+            for _ in range(3):
+                assert rt.wait(rt.invoke("touch_mem"), timeout=20) == 0
+            warm = rt.hosts["host0"]._warm["touch_mem"]
+            mmapped = bool(warm) and warm[0]._mm is not None
+            return rt.cold_start_stats(), mmapped
+        finally:
+            rt.shutdown()
+
+    stats, mmapped = run("always")
+    if mmapped:
+        assert stats["reclaimed_pages"] >= 1
+    stats, _ = run("never")
+    assert stats["reclaimed_pages"] == 0
+    assert stats["retained_pages"] >= 1
+
+
+def test_runtime_reset_reports_reclaimed_pages():
+    """End-to-end: under ``reclaim="always"`` a warm call that dirties
+    private memory on an mmap-CoW Faaslet shows up in the host
+    reclaimed_pages metric."""
+    import mmap as _mmap
+    if not hasattr(_mmap, "MADV_DONTNEED"):
+        pytest.skip("madvise unavailable")
+    rt = FaasmRuntime(n_hosts=1, reclaim="always")
     try:
         def init(api):
             api.brk(EAGER_COPY_MAX_BYTES + 2 * WASM_PAGE)  # big mmap-able arena

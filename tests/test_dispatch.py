@@ -359,6 +359,72 @@ def test_state_hint_with_no_holder_falls_back_to_pool():
         rt.shutdown()
 
 
+def test_state_hint_pins_key_to_consistent_holder():
+    """With several holders, the key pins to ONE of them by rendezvous
+    hashing — stable across batches (the replica stays hot there) instead
+    of round-robining within the holder set."""
+    import zlib
+    rt = FaasmRuntime(n_hosts=3, capacity=8)
+    try:
+        rt.global_tier.set("pinkey", bytes(4096), host="up")
+
+        def touch(api):
+            api.get_state("pinkey", writable=False)
+            return 0
+
+        rt.upload(FunctionDef("touch", touch))
+        for hid in rt.hosts:
+            rt.schedulers[hid].register_warm("touch")
+        holders = ["host0", "host2"]
+        for hid in holders:
+            rt.hosts[hid].local_tier.pull("pinkey")
+
+        expected = max(holders,
+                       key=lambda h: zlib.crc32(f"pinkey@{h}".encode()))
+        for _ in range(2):                     # stable batch after batch
+            cids = rt.invoke_many("touch", [b""] * 6, state_hint=["pinkey"])
+            assert rt.wait_all(cids, timeout=30) == [0] * 6
+            assert {rt.call(c).host for c in cids} == {expected}
+    finally:
+        rt.shutdown()
+
+
+def test_state_hint_spills_to_next_holder_when_saturated():
+    """Capacity weighting: a pinned holder without capacity is skipped and
+    the batch lands on the next-ranked holder."""
+    import zlib
+    rt = FaasmRuntime(n_hosts=3, capacity=8)
+    try:
+        rt.global_tier.set("capkey", bytes(4096), host="up")
+
+        def touch(api):
+            api.get_state("capkey", writable=False)
+            return 0
+
+        rt.upload(FunctionDef("touch", touch))
+        for hid in rt.hosts:
+            rt.schedulers[hid].register_warm("touch")
+        holders = ["host0", "host1"]
+        for hid in holders:
+            rt.hosts[hid].local_tier.pull("capkey")
+        ranked = sorted(holders, reverse=True,
+                        key=lambda h: zlib.crc32(f"capkey@{h}".encode()))
+        pinned, spill = ranked
+        rt.hosts[pinned].has_capacity = lambda: False     # saturate it
+        cids = rt.invoke_many("touch", [b""] * 4, state_hint=["capkey"])
+        assert rt.wait_all(cids, timeout=30) == [0] * 4
+        assert {rt.call(c).host for c in cids} == {spill}
+
+        # every holder saturated: the batch round-robins queueing across
+        # the holder set instead of piling on the top-ranked one
+        rt.hosts[spill].has_capacity = lambda: False
+        cids = rt.invoke_many("touch", [b""] * 4, state_hint=["capkey"])
+        assert rt.wait_all(cids, timeout=30) == [0] * 4
+        assert {rt.call(c).host for c in cids} == set(holders)
+    finally:
+        rt.shutdown()
+
+
 # ---------------------------------------------------------------------------
 # time-sliced cancellation inside kernel dispatch
 # ---------------------------------------------------------------------------
