@@ -15,6 +15,9 @@ failure:
   * the ``kernels/state_push`` entry points (the wire codec dispatched from
     ``LocalTier.push_delta(wire="int8")``) fail to import or to quantise a
     trivial delta                                        -> exit 1
+  * the ``repro.analysis`` entry points (faasmlint rules, sanitizer lock
+    factories and hook installation) fail to resolve — a refactor silently
+    orphaning the instrumentation                        -> exit 1
 
 Invoked standalone:  python scripts/check_jax_pin.py
 """
@@ -37,7 +40,51 @@ def _parse(version: str):
     return tuple(int(n) for n in (nums + ["0", "0"])[:3])
 
 
+def check_analysis_entry_points() -> int:
+    """The isolation checker's entry points must resolve and its hooks must
+    install/uninstall — run before the jax probes so a jax-less container
+    still verifies the instrumentation isn't orphaned."""
+    try:
+        from repro.analysis import holds_stripe              # noqa: F401
+        from repro.analysis.lint import RULES, lint_source
+        from repro.analysis import sanitizer
+        from repro import cancellation
+        from repro.state import kv, local, wire
+
+        assert {"stripe-access", "lock-blocking", "wire-construct",
+                "tier-copy", "suppress-justify"} <= set(RULES), RULES
+        # a seeded violation must still be caught
+        probe = ("from repro.state.wire import WireFrame\n"
+                 "f = WireFrame(wire='exact', numel=0, payload=None)\n")
+        vs = lint_source(probe, "probe.py")
+        assert any(v.rule == "wire-construct" for v in vs), vs
+        # the sanitizer must install its hook state into the fabric modules
+        st = sanitizer.enable()
+        try:
+            assert kv._SAN is st and local._SAN is st and wire._SAN is st
+            assert cancellation._SAN_GUARD is not None
+            assert isinstance(sanitizer.make_mutex("probe"),
+                              sanitizer.SanLock)
+        finally:
+            sanitizer.disable()
+        assert kv._SAN is None and cancellation._SAN_GUARD is None
+    except Exception as e:
+        print(f"check_jax_pin: FAIL — repro.analysis entry points do not "
+              f"resolve: {e!r}\n"
+              f"  scripts/faasmlint.py and the FAASM_SANITIZE hooks in "
+              f"repro/state + repro/cancellation depend on these; fix "
+              f"src/repro/analysis/ before trusting the tier-1 gate.")
+        return 1
+    return 0
+
+
 def main() -> int:
+    sys.path.insert(0, os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+    rc = check_analysis_entry_points()
+    if rc:
+        return rc
+
     try:
         import jax
     except ImportError as e:
@@ -81,8 +128,6 @@ def main() -> int:
     # loud, not a slow failure at transfer time.  Runs after the pltpu
     # probes above so a pallas rename hits its targeted diagnostic first,
     # not this generic one.
-    sys.path.insert(0, os.path.join(
-        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
     try:
         from repro.kernels.state_push import (apply_pull, dequantize,
                                               encode_pull, quantize_delta)

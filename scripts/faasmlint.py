@@ -1,0 +1,52 @@
+#!/usr/bin/env python3
+"""Run the repo-specific state-fabric lint (repro.analysis.lint) over src/.
+
+Part of the tier-1 gate (scripts/tier1.sh runs it before pytest): the
+locking/wire-protocol discipline documented in docs/invariants.md is
+enforced mechanically, not by review.  Exit 1 on any violation.
+
+Usage:
+  python scripts/faasmlint.py                # lint src/ (the gate)
+  python scripts/faasmlint.py path [path..]  # lint specific files/trees
+  python scripts/faasmlint.py --list-rules
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.analysis.lint import RULES, lint_paths    # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*",
+                    help="files or directories (default: src/)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule names and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name, desc in RULES.items():
+            print(f"{name}: {desc}")
+        return 0
+
+    paths = args.paths or [os.path.join(_ROOT, "src")]
+    violations = lint_paths(paths)
+    for v in violations:
+        print(v)
+    if violations:
+        print(f"faasmlint: {len(violations)} violation(s). Fix them, or "
+              f"suppress a justified exception with "
+              f"'# faasmlint: disable=<rule> -- <why>'.")
+        return 1
+    print(f"faasmlint: OK ({', '.join(RULES)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,4 +8,5 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python scripts/check_jax_pin.py
+python scripts/faasmlint.py
 exec python -m pytest -x -q -p no:cacheprovider -m "not slow" "$@"

@@ -29,6 +29,12 @@ DEFAULT_SLICE_S = 0.005          # max extra latency a cancel can see per slice
 
 _tls = threading.local()
 
+# repro.analysis.sanitizer installs its checkpoint guard here (enable()):
+# it reports any checkpoint reached while a stripe/key lock is held — a
+# cancel raising under one would unwind past the release.  None (the
+# default) keeps the disabled cost at a single module-global compare.
+_SAN_GUARD: Optional[Callable[[], None]] = None
+
 
 def install(check: Callable[[], None],
             slice_s: float = DEFAULT_SLICE_S) -> None:
@@ -47,6 +53,8 @@ def clear() -> None:
 def checkpoint() -> None:
     """Run the installed cancel check if the time slice elapsed.  No-op (one
     attribute read) on threads with nothing installed."""
+    if _SAN_GUARD is not None:
+        _SAN_GUARD()
     check: Optional[Callable[[], None]] = getattr(_tls, "check", None)
     if check is None:
         return

@@ -34,6 +34,8 @@ from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
+from repro.analysis.sanitizer import make_mutex
+
 WASM_PAGE = 65536
 FAASLET_OVERHEAD_BYTES = 200 * 1024       # paper Tab. 3: ~200 kB per Faaslet
 CONTAINER_OVERHEAD_BYTES = 8 * (1 << 20)  # paper §6.2: ~8 MB per container
@@ -171,7 +173,7 @@ class Faaslet:
         self.restored_from_proto = False
         self.reclaimed_pages = 0        # dirty pages handed back via madvise
         self.retained_pages = 0         # dirty pages re-stamped, kept resident
-        self._lock = threading.RLock()
+        self._lock = make_mutex("faaslet", f"faaslet:{self.id}")
 
     # -- private linear memory (brk/mmap) --------------------------------------
 

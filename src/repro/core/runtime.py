@@ -32,6 +32,7 @@ from typing import Any, Callable, Dict, List, Optional
 import numpy as np
 
 from repro import cancellation
+from repro.analysis.sanitizer import make_mutex
 from repro.core.faaslet import (CONTAINER_OVERHEAD_BYTES,
                                 FAASLET_OVERHEAD_BYTES, Faaslet)
 from repro.core.host_interface import CallCancelled, FaasmAPI
@@ -135,7 +136,7 @@ class Host:
         self._container_tiers: Dict[int, LocalTier] = {}
         self._warm: Dict[str, List[Faaslet]] = defaultdict(list)
         self._user_state: Dict[int, Any] = {}
-        self._mutex = threading.RLock()
+        self._mutex = make_mutex("host", f"host:{host_id}")
         self._inflight = 0
         self.alive = True
         self.pool = ThreadPoolExecutor(max_workers=capacity,
@@ -406,7 +407,7 @@ class FaasmRuntime:
         self._calls: Dict[int, Call] = {}
         self._active: set = set()                # ids of not-yet-completed calls
         self._rr = itertools.count()
-        self._mutex = threading.RLock()
+        self._mutex = make_mutex("runtime")
         self._net: Dict[tuple, queue.Queue] = defaultdict(queue.Queue)
         self.straggler_timeout = straggler_timeout
         self.heartbeat_timeout = heartbeat_timeout

@@ -48,7 +48,13 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.state.wire import WireFrame, get_codec
+from repro.analysis.annotations import holds_stripe
+from repro.analysis.sanitizer import make_mutex, wrap_rwlock
+from repro.state.wire import WireFrame, frame_from_quantized, get_codec
+
+# repro.analysis.sanitizer installs its hook state here (enable()); None
+# compiles every check in this module down to one pointer compare
+_SAN = None
 
 DEFAULT_CHUNK = 1 << 20          # 1 MiB state chunks
 DEFAULT_STRIPES = 64
@@ -129,7 +135,7 @@ class _Stripe:
                  "pushed", "copied", "bcast")
 
     def __init__(self):
-        self.lock = threading.RLock()
+        self.lock = make_mutex("stripe")
         self.store: Dict[str, _Value] = {}
         self.meta: Dict[str, KeyMeta] = {}
         # RW locks live outside the meta map: a delete must not orphan a lock
@@ -143,16 +149,25 @@ class _Stripe:
         self.copied = 0                      # bytes actually memcpy'd by the tier
         self.bcast = 0                       # wire bytes fanned out to peers
 
+    @holds_stripe
     def bump(self, key: str) -> None:
         self.vc += 1
-        self.meta.setdefault(key, KeyMeta()).version = self.vc
+        m = self.meta.setdefault(key, KeyMeta())
+        if _SAN is not None:
+            _SAN.version_bumped(self, key, m.version, self.vc)
+        m.version = self.vc
 
+    @holds_stripe
     def record(self, key: str, frame: WireFrame, window: int,
                window_bytes: int) -> None:
         """Retain an applied frame for delta pulls (stripe lock held).
         Trimming the oldest frame raises the window floor to its version:
         pulls from bases at or past the floor stay serviceable."""
         m = self.meta[key]
+        if _SAN is not None:
+            _SAN.frame_recorded(self, key, frame,
+                                m.frames[-1].version if m.frames else None,
+                                m.floor)
         m.frames.append(frame)
         m.frames_bytes += frame.nbytes
         while m.frames and (len(m.frames) > window
@@ -161,6 +176,7 @@ class _Stripe:
             m.frames_bytes -= old.nbytes
             m.floor = old.version
 
+    @holds_stripe
     def invalidate(self, key: str) -> None:
         """A non-delta mutation: the retained window can no longer express
         the path from any older base — drop it and jump the floor to the
@@ -230,6 +246,8 @@ class GlobalTier:
     def get(self, key: str, *, host: str = "?") -> bytes:
         s = self._stripe(key)
         with s.lock:
+            if _SAN is not None:
+                _SAN.stripe_touch(s.lock, key)
             v = s.store[key]
             val = v.buf[:v.length].tobytes()
             s.pulled[host] = s.pulled.get(host, 0) + v.length
@@ -240,6 +258,9 @@ class GlobalTier:
         s = self._stripe(key)
         n = len(value)
         with s.lock:
+            if _SAN is not None:
+                _SAN.stripe_touch(s.lock, key)
+                _SAN.gen_bump(self, key)
             v = s.store.get(key)
             if v is None or v.buf.size < n:
                 v = _Value(capacity=n)
@@ -258,6 +279,9 @@ class GlobalTier:
         s = self._stripe(key)
         n = len(value)
         with s.lock:
+            if _SAN is not None:
+                _SAN.stripe_touch(s.lock, key)
+                _SAN.gen_bump(self, key)
             v = s.store.setdefault(key, _Value())
             off = v.length
             v.ensure(off + n)
@@ -277,6 +301,9 @@ class GlobalTier:
         against exactly the state they produced)."""
         s = self._stripe(key)
         with s.lock:
+            if _SAN is not None:
+                _SAN.stripe_touch(s.lock, key)
+                _SAN.gen_bump(self, key)
             v = s.store.get(key)
             cur = v.buf[:v.length].tobytes() if v is not None else b""
             new = transform(cur)
@@ -302,6 +329,8 @@ class GlobalTier:
                   host: str = "?") -> bytes:
         s = self._stripe(key)
         with s.lock:
+            if _SAN is not None:
+                _SAN.stripe_touch(s.lock, key)
             v = s.store[key]
             if offset < 0 or offset + length > v.length:
                 raise IndexError(
@@ -317,6 +346,9 @@ class GlobalTier:
         s = self._stripe(key)
         n = len(value)
         with s.lock:
+            if _SAN is not None:
+                _SAN.stripe_touch(s.lock, key)
+                _SAN.gen_bump(self, key)
             if offset < 0:
                 raise IndexError("negative state offset")
             v = s.store.setdefault(key, _Value())
@@ -345,6 +377,9 @@ class GlobalTier:
         n = dest.size
         s = self._stripe(key)
         with s.lock:
+            if _SAN is not None:
+                _SAN.stripe_touch(s.lock, key)
+                _tok = _SAN.read_begin(self, key)
             v = s.store[key]
             if offset < 0 or (not clamp and offset + n > v.length):
                 raise IndexError(
@@ -355,6 +390,8 @@ class GlobalTier:
                 dest[:n] = v.buf[offset:offset + n]
             s.pulled[host] = s.pulled.get(host, 0) + n
             s.copied += n
+            if _SAN is not None:
+                _SAN.read_end(self, key, _tok)
             if return_version:
                 m = s.meta.get(key)
                 return n, (m.version if m is not None else 0)
@@ -370,6 +407,9 @@ class GlobalTier:
         n = src.size
         s = self._stripe(key)
         with s.lock:
+            if _SAN is not None:
+                _SAN.stripe_touch(s.lock, key)
+                _SAN.gen_bump(self, key)
             if offset < 0:
                 raise IndexError("negative state offset")
             v = s.store.setdefault(key, _Value())
@@ -401,6 +441,9 @@ class GlobalTier:
         itemsize = dtype.itemsize
         s = self._stripe(key)
         with s.lock:
+            if _SAN is not None:
+                _SAN.stripe_touch(s.lock, key)
+                _SAN.gen_bump(self, key)
             v = s.store[key]
             g = v.buf[:v.length - v.length % itemsize].view(dtype)
             n = min(g.size, local.size)
@@ -448,6 +491,9 @@ class GlobalTier:
         wire = frame.nbytes
         s = self._stripe(key)
         with s.lock:
+            if _SAN is not None:
+                _SAN.stripe_touch(s.lock, key)
+                _SAN.gen_bump(self, key)
             v = s.store[key]
             g = v.buf[:v.length - v.length % dt.itemsize].view(dt)
             n = min(g.size, frame.numel)
@@ -459,6 +505,8 @@ class GlobalTier:
             m = s.meta[key]
             frame.version = m.version
             frame.origin = origin if origin is not None else host
+            if _SAN is not None:
+                _SAN.frame_applied(self, key, frame)
             interested = (any(p != frame.origin for p in m.pullers)
                           or any(h != frame.origin
                                  for h in s.subs.get(key, ())))
@@ -477,10 +525,7 @@ class GlobalTier:
                         host: str = "?") -> int:
         """Apply an int8-quantised delta push (the ``kernels/state_push``
         wire tuple) — compatibility front over :meth:`apply_wire`."""
-        frame = WireFrame(wire="int8", numel=int(numel),
-                          payload=np.asarray(q),
-                          scales=np.asarray(scales, np.float32),
-                          dtype=np.dtype(dtype))
+        frame = frame_from_quantized(q, scales, numel, dtype=dtype)
         return self.apply_wire(key, frame, host=host)
 
     def pull_wire(self, key: str, base_version: int, *, wire: str = "int8",
@@ -543,6 +588,8 @@ class GlobalTier:
         new_residual = None
         if frame.wire != "exact":
             new_residual = delta - frame.decode()
+            if _SAN is not None:
+                _SAN.check_residual(delta, frame.decode(), new_residual)
         frame.prev_version, frame.version = base_version, cur
         with s.lock:
             s.pulled[host] = s.pulled.get(host, 0) + frame.nbytes
@@ -652,7 +699,10 @@ class GlobalTier:
     def lock(self, key: str) -> RWLock:
         s = self._stripe(key)
         with s.lock:
-            return s.locks.setdefault(key, RWLock())
+            lk = s.locks.get(key)
+            if lk is None:
+                lk = s.locks[key] = wrap_rwlock(RWLock(), "key", key)
+            return lk
 
     def version(self, key: str) -> int:
         """Write version of ``key`` (0 if never written)."""

@@ -52,11 +52,16 @@ from typing import Any, Dict, Optional, Set
 
 import numpy as np
 
+from repro.analysis.sanitizer import make_mutex, wrap_rwlock
 from repro.state.kv import GlobalTier, RWLock
 from repro.state.wire import (INT8_WIRE_MIN_BYTES, WireFrame, WirePolicy,
                               get_codec)
 
 __all__ = ["DeviceReplica", "INT8_WIRE_MIN_BYTES", "LocalTier", "Replica"]
+
+# repro.analysis.sanitizer installs its hook state here (enable()); None
+# compiles every check in this module down to one pointer compare
+_SAN = None
 
 
 def _mean_abs(x) -> float:
@@ -96,7 +101,8 @@ class DeviceReplica:
 @dataclass
 class Replica:
     buf: np.ndarray                      # uint8, the shared region backing
-    lock: RWLock = field(default_factory=RWLock)
+    lock: RWLock = field(
+        default_factory=lambda: wrap_rwlock(RWLock(), "replica"))
     present_chunks: Set[int] = field(default_factory=set)
     dirty_chunks: Set[int] = field(default_factory=set)
     full: bool = False                   # whole value present
@@ -127,7 +133,7 @@ class LocalTier:
         self._replicas: Dict[str, Replica] = {}
         self._policies: Dict[str, WirePolicy] = {}
         self._subscribed: Set[str] = set()
-        self._mutex = threading.RLock()
+        self._mutex = make_mutex("tier", f"tier:{host_id}")
 
     # -- replica lifecycle ------------------------------------------------------
 
@@ -352,6 +358,8 @@ class LocalTier:
         without the base update the next ``push_delta`` would re-push it),
         and a fresh device replica's arrays, so a device-native push keeps
         diffing against content the global tier has seen."""
+        if _SAN is not None:
+            _SAN.assert_write_held(r.lock, "_apply_frame_locked")
         delta = frame.decode()
         dt = np.dtype(frame.dtype)
         # the frame names the value dtype it applies to: viewing the buffer
@@ -551,6 +559,7 @@ class LocalTier:
         """Re-stamp the delta base from the buffer (replica write lock held
         by the caller)."""
         if r.base is None or r.base.size != r.buf.size:
+            # faasmlint: disable=tier-copy -- replica-internal base snapshot
             r.base = r.buf.copy()
         else:
             r.base[:] = r.buf                # reuse the allocation

@@ -45,6 +45,10 @@ import numpy as np
 
 WIRES = ("exact", "int8")
 
+# repro.analysis.sanitizer installs its hook state here (enable()); None
+# compiles every check in this module down to one pointer compare
+_SAN = None
+
 # Values smaller than this stay on the exact wire even when int8 is
 # requested: the per-row scales + dispatch overhead eat the 4x payload
 # saving on tiny values.  (Historic home: repro.state.local, re-exported
@@ -127,6 +131,10 @@ class Int8Codec:
         q, s, n = ops.quantize_delta(eff, base, backend=backend)
         deq = ops.dequantize(q, s, n)
         residual = (eff - base).reshape(-1)[:n] - deq
+        if _SAN is not None:
+            true_delta = (np.asarray(eff, np.float32).reshape(-1)[:int(n)]
+                          - np.asarray(base, np.float32).reshape(-1)[:int(n)])
+            _SAN.check_residual(true_delta, deq, residual)
         # np.asarray blocks on the dispatched kernels: nothing in flight
         # still reads the inputs once the frame is materialised
         return WireFrame(wire=self.name, numel=int(n), payload=np.asarray(q),
@@ -143,6 +151,19 @@ class Int8Codec:
                                   backend=backend)
         return WireFrame(wire=self.name, numel=int(n), payload=np.asarray(q),
                          scales=np.asarray(s, np.float32))
+
+
+def frame_from_quantized(q, scales, numel: int, *,
+                         dtype=np.float32) -> WireFrame:
+    """Wrap a raw ``kernels/state_push`` wire tuple ``(q, scales, numel)``
+    as an int8 frame — the codec-layer constructor for compatibility
+    fronts (e.g. ``GlobalTier.apply_quantized``) that receive the tuple
+    instead of encoding it themselves.  Keeps ``WireFrame`` construction
+    inside this module (the ``wire-construct`` lint rule), so frames can't
+    skip version stamping or residual ownership."""
+    return WireFrame(wire="int8", numel=int(numel), payload=np.asarray(q),
+                     scales=np.asarray(scales, np.float32),
+                     dtype=np.dtype(dtype))
 
 
 _CODECS: Dict[str, Any] = {"exact": ExactCodec(), "int8": Int8Codec()}

@@ -3,9 +3,19 @@
 NOTE: no XLA_FLAGS device-count forcing here — smoke tests and benchmarks
 must see the real single CPU device.  The multi-device mini dry-run test runs
 in a subprocess with its own XLA_FLAGS (see test_dryrun_mini.py).
+
+Sanitizer integration: ``FAASM_SANITIZE=1`` runs the whole suite with the
+``repro.analysis.sanitizer`` runtime checks enabled; tests marked
+``@pytest.mark.sanitize`` get them regardless.  The autouse fixture resets
+the sanitizer per test and fails the test on any report it didn't consume
+(seeded-violation tests drain theirs with ``take_reports()``).
 """
+import os
+
 import numpy as np
 import pytest
+
+_SANITIZE_ENV = os.environ.get("FAASM_SANITIZE") == "1"
 
 
 def pytest_collection_modifyitems(config, items):
@@ -16,6 +26,27 @@ def pytest_collection_modifyitems(config, items):
         if "pallas_interpret" in item.nodeid or \
                 "test_kernels_property" in item.nodeid:
             item.add_marker(pytest.mark.slow)
+
+
+@pytest.fixture(autouse=True)
+def _faasm_sanitize(request):
+    """Per-test sanitizer lifecycle (see module docstring)."""
+    marked = request.node.get_closest_marker("sanitize") is not None
+    if not (_SANITIZE_ENV or marked):
+        yield
+        return
+    from repro.analysis import sanitizer
+    sanitizer.enable()
+    sanitizer.reset()
+    try:
+        yield
+        leftovers = sanitizer.take_reports()
+    finally:
+        if not _SANITIZE_ENV:
+            sanitizer.disable()      # marker-only: don't leak into raw tests
+    if leftovers:
+        pytest.fail("sanitizer reports:\n\n"
+                    + "\n\n".join(str(r) for r in leftovers), pytrace=False)
 
 
 @pytest.fixture

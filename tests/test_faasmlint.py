@@ -1,0 +1,204 @@
+"""faasmlint: every rule catches a seeded violation, spares the clean
+idiom, honours justified suppressions — and the real src/ tree is clean.
+"""
+import pathlib
+import subprocess
+import sys
+
+from repro.analysis.lint import RULES, lint_paths, lint_source
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def rules_of(violations):
+    return {v.rule for v in violations}
+
+
+# -- stripe-access ----------------------------------------------------------
+
+def test_stripe_access_seeded():
+    code = (
+        "class GlobalTier:\n"
+        "    def bad(self, key):\n"
+        "        s = self._stripe(key)\n"
+        "        return s.store[key]\n"
+    )
+    vs = lint_source(code, "state/kv.py")
+    assert rules_of(vs) == {"stripe-access"}
+    assert vs[0].line == 4
+
+
+def test_stripe_access_clean_under_lock():
+    code = (
+        "class GlobalTier:\n"
+        "    def good(self, key):\n"
+        "        s = self._stripe(key)\n"
+        "        with s.lock:\n"
+        "            return s.store[key]\n"
+    )
+    assert lint_source(code, "state/kv.py") == []
+
+
+def test_stripe_access_iteration_and_holds_stripe():
+    code = (
+        "from repro.analysis import holds_stripe\n"
+        "class GlobalTier:\n"
+        "    def bad(self):\n"
+        "        for s in self._stripes:\n"
+        "            s.copied = 0\n"
+        "class _Stripe:\n"
+        "    @holds_stripe\n"
+        "    def bump(self, key):\n"
+        "        self.vc += 1\n"
+    )
+    vs = lint_source(code, "state/kv.py")
+    # the un-locked iteration is caught; the @holds_stripe helper is exempt
+    assert rules_of(vs) == {"stripe-access"}
+    assert [v.line for v in vs] == [5]
+
+
+# -- lock-blocking ----------------------------------------------------------
+
+def test_lock_blocking_under_stripe_lock_seeded():
+    code = (
+        "class GlobalTier:\n"
+        "    def bad(self, key, frame):\n"
+        "        s = self._stripe(key)\n"
+        "        with s.lock:\n"
+        "            return frame.decode()\n"
+    )
+    assert rules_of(lint_source(code, "state/kv.py")) == {"lock-blocking"}
+
+
+def test_lock_blocking_under_key_lock_seeded():
+    code = (
+        "def bad(gt, tier, key):\n"
+        "    lock = gt.lock(key)\n"
+        "    lock.acquire_write()\n"
+        "    try:\n"
+        "        tier.pull(key)\n"
+        "    finally:\n"
+        "        lock.release_write()\n"
+    )
+    assert rules_of(lint_source(code, "state/local.py")) == {"lock-blocking"}
+
+
+def test_lock_blocking_spares_str_encode_and_outside_lock():
+    code = (
+        "import json\n"
+        "def good(api, gt, key, frame, d):\n"
+        "    api.lock_state_global_write(key)\n"
+        "    try:\n"
+        "        gt.set(key, json.dumps(d).encode())\n"
+        "    finally:\n"
+        "        api.unlock_state_global_write(key)\n"
+        "    return frame.decode()\n"
+    )
+    assert lint_source(code, "state/ddo.py") == []
+
+
+def test_lock_blocking_codec_encode_under_key_lock():
+    code = (
+        "def bad(gt, codec, key, eff, base):\n"
+        "    lock = gt.lock(key)\n"
+        "    lock.acquire_write()\n"
+        "    try:\n"
+        "        return codec.encode(eff, base)\n"
+        "    finally:\n"
+        "        lock.release_write()\n"
+    )
+    assert rules_of(lint_source(code, "state/local.py")) == {"lock-blocking"}
+
+
+# -- wire-construct ---------------------------------------------------------
+
+def test_wire_construct_seeded_and_home_exempt():
+    code = (
+        "from repro.state.wire import WireFrame\n"
+        "def f():\n"
+        "    return WireFrame(wire='exact', numel=0, payload=None)\n"
+    )
+    assert rules_of(lint_source(code, "state/kv.py")) == {"wire-construct"}
+    assert lint_source(code, "repro/state/wire.py") == []
+
+
+# -- tier-copy --------------------------------------------------------------
+
+def test_tier_copy_seeded():
+    code = (
+        "def bad(r):\n"
+        "    return r.buf.copy()\n"
+    )
+    assert rules_of(lint_source(code, "state/local.py")) == {"tier-copy"}
+
+
+def test_tier_copy_accounted_exempt():
+    code = (
+        "def good(self, s, v, host):\n"
+        "    val = v.buf.tobytes()\n"
+        "    s.copied += v.length\n"
+        "    return val\n"
+        "def good2(self, replica):\n"
+        "    self.faaslet.usage.charge_net(n_in=replica.buf.size)\n"
+        "    return replica.buf.copy()\n"
+    )
+    assert lint_source(code, "state/kv.py") == []
+
+
+def test_tier_copy_out_of_scope_file():
+    code = "def f(a):\n    return a.copy()\n"
+    assert lint_source(code, "core/scheduler.py") == []
+
+
+# -- suppressions -----------------------------------------------------------
+
+def test_suppression_without_justification_is_a_violation():
+    # an unjustified disable is itself flagged AND does not silence the rule
+    code = "def f(r):\n    return r.buf.copy()  # faasmlint: disable=tier-copy\n"
+    assert rules_of(lint_source(code, "state/local.py")) == \
+        {"suppress-justify", "tier-copy"}
+
+
+def test_suppression_with_justification_silences_trailing():
+    code = ("def f(r):\n"
+            "    return r.buf.copy()"
+            "  # faasmlint: disable=tier-copy -- test fixture copy\n")
+    assert lint_source(code, "state/local.py") == []
+
+
+def test_suppression_standalone_comment_covers_next_code_line():
+    code = ("def f(r):\n"
+            "    # faasmlint: disable=tier-copy -- base snapshot, not traffic\n"
+            "    return r.buf.copy()\n")
+    assert lint_source(code, "state/local.py") == []
+
+
+def test_suppression_unknown_rule_is_a_violation():
+    code = "x = 1  # faasmlint: disable=no-such-rule -- because\n"
+    assert rules_of(lint_source(code, "m.py")) == {"suppress-justify"}
+
+
+def test_suppression_only_silences_named_rule():
+    code = ("def f(r, frame, gt, key):\n"
+            "    # faasmlint: disable=lock-blocking -- wrong rule named\n"
+            "    return r.buf.copy()\n")
+    assert rules_of(lint_source(code, "state/local.py")) == {"tier-copy"}
+
+
+# -- the gate ---------------------------------------------------------------
+
+def test_src_tree_is_clean():
+    assert lint_paths([REPO / "src"]) == []
+
+
+def test_cli_exits_zero_on_src():
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "faasmlint.py")],
+        cwd=REPO, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_every_rule_is_documented():
+    assert set(RULES) == {"stripe-access", "lock-blocking", "wire-construct",
+                          "tier-copy", "suppress-justify"}
+    assert all(RULES.values())
