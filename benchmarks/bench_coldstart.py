@@ -48,13 +48,14 @@ re-encodes with the fused quantise kernel, ~26% of the full-pull bytes);
 the wire frame at push time and its next pull moves **zero** bytes.
 """
 import json
+import sys
 import time
 
 import numpy as np
 
 from benchmarks.common import emit
 from repro.core import (CONTAINER_OVERHEAD_BYTES, FAASLET_OVERHEAD_BYTES,
-                        Faaslet, ProtoFaaslet)
+                        FaasmRuntime, Faaslet, FunctionDef, ProtoFaaslet)
 from repro.core.faaslet import WASM_PAGE
 from repro.state.kv import GlobalTier
 from repro.state.local import LocalTier
@@ -263,6 +264,92 @@ def _bench_pull_wire() -> dict:
     return rows
 
 
+def _bench_faults() -> dict:
+    """Failure recovery and degraded-mode throughput (docs/fault_model.md):
+    latency from a host kill to the lost call's settle (detect -> requeue
+    with backoff -> re-execute), and fan-out RPS as the cluster loses
+    hosts."""
+    # -- recovery latency: kill the host under a running call -----------------
+    def napper(api):
+        time.sleep(0.03)
+        api.write_call_output(b"ok")
+        return 0
+
+    lat_ms = []
+    for _ in range(5):
+        rt = FaasmRuntime(n_hosts=2, capacity=1, backoff=0.001)
+        try:
+            rt.upload(FunctionDef("nap", napper))
+            cid = rt.invoke("nap")
+            deadline = time.perf_counter() + 5.0
+            victim = None
+            while victim is None and time.perf_counter() < deadline:
+                victim = next((h for h in rt.alive_hosts()
+                               if h._inflight > 0), None)
+            t0 = time.perf_counter()
+            rt.fail_host(victim.id)
+            assert rt.wait(cid, timeout=30) == 0
+            lat_ms.append((time.perf_counter() - t0) * 1e3)
+            assert rt.call(cid).attempts >= 2
+        finally:
+            rt.shutdown()
+    lat_ms.sort()
+    rows = {"recovery": {
+        "samples": len(lat_ms),
+        "call_body_ms": 30.0,
+        "kill_to_settle_ms_p50": lat_ms[len(lat_ms) // 2],
+        "kill_to_settle_ms_max": lat_ms[-1],
+    }}
+
+    # -- degraded throughput: fan-out RPS as hosts die -------------------------
+    def echo(api):
+        api.write_call_output(api.read_call_input())
+        return 0
+
+    n_calls = 400
+    degraded = {}
+    for dead in (0, 1, 2, 4):
+        rt = FaasmRuntime(n_hosts=6)
+        try:
+            rt.upload(FunctionDef("echo", echo))
+            for hid in list(rt.hosts)[:dead]:
+                rt.fail_host(hid)
+            rt.wait_all(rt.invoke_many("echo", [b"w"] * 32), timeout=30)
+            t0 = time.perf_counter()
+            rcs = rt.wait_all(rt.invoke_many("echo", [b"x"] * n_calls),
+                              timeout=60)
+            wall = time.perf_counter() - t0
+            degraded[f"dead_{dead}"] = {
+                "alive_hosts": len(rt.alive_hosts()),
+                "calls": n_calls,
+                "ok": sum(1 for r in rcs if r == 0),
+                "rps": n_calls / wall,
+            }
+        finally:
+            rt.shutdown()
+    base = degraded["dead_0"]["rps"]
+    for row in degraded.values():
+        row["rps_vs_healthy"] = row["rps"] / max(base, 1e-9)
+    rows["degraded"] = degraded
+    return rows
+
+
+def run_faults() -> None:
+    fr = _bench_faults()
+    rec, deg = fr["recovery"], fr["degraded"]
+    emit("faults/recovery_ms_p50", rec["kill_to_settle_ms_p50"],
+         f"kill->settle incl. {rec['call_body_ms']:.0f}ms re-run body")
+    for name, row in deg.items():
+        emit(f"faults/rps_{name}", row["rps"],
+             f"{row['alive_hosts']} alive, {row['ok']}/{row['calls']} ok, "
+             f"{row['rps_vs_healthy'] * 100:.0f}% of healthy")
+    with open("BENCH_faults.json", "w") as fh:
+        json.dump(fr, fh, indent=2)
+    print(f"# fault recovery written to BENCH_faults.json: p50 "
+          f"{rec['kill_to_settle_ms_p50']:.1f}ms kill->settle, "
+          f"{deg['dead_4']['rps_vs_healthy'] * 100:.0f}% RPS at 4 dead hosts")
+
+
 def main() -> None:
     # --- init latency: fresh Faaslet vs Proto restore (Tab. 3) ------------------
     n = 200
@@ -378,6 +465,12 @@ def main() -> None:
           f"broadcast peer pulls "
           f"{pl['broadcast']['pull_bytes_per_refresh']:.0f} bytes")
 
+    # --- failure recovery + degraded-mode throughput ------------------------------
+    run_faults()
+
 
 if __name__ == "__main__":
-    main()
+    if "--faults" in sys.argv:
+        run_faults()                               # just the failure rows
+    else:
+        main()

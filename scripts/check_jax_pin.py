@@ -48,11 +48,18 @@ def check_analysis_entry_points() -> int:
         from repro.analysis import holds_stripe              # noqa: F401
         from repro.analysis.lint import RULES, lint_source
         from repro.analysis import sanitizer
-        from repro import cancellation
+        from repro import cancellation, faults
         from repro.state import kv, local, wire
 
         assert {"stripe-access", "lock-blocking", "wire-construct",
-                "tier-copy", "suppress-justify"} <= set(RULES), RULES
+                "tier-copy", "fault-point", "suppress-justify"} \
+            <= set(RULES), RULES
+        # the fault layer must be disarmed at import and resolve its public
+        # surface (the chaos gate in tier1.sh depends on it)
+        assert faults.active() is None
+        assert faults.point("wire-frame-drop") is False
+        assert callable(faults.arm) and callable(faults.disarm)
+        assert len(faults.FAULT_POINTS) == 8, faults.FAULT_POINTS
         # a seeded violation must still be caught
         probe = ("from repro.state.wire import WireFrame\n"
                  "f = WireFrame(wire='exact', numel=0, payload=None)\n")

@@ -9,4 +9,9 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python scripts/check_jax_pin.py
 python scripts/faasmlint.py
+# Chaos smoke: the three fixed-seed fault-matrix storms under the
+# sanitizer's attempt-fence shadow (the wider seeded sweep is slow-marked;
+# see docs/fault_model.md).
+FAASM_SANITIZE=1 python -m pytest -x -q -p no:cacheprovider \
+    tests/test_chaos.py -k smoke
 exec python -m pytest -x -q -p no:cacheprovider -m "not slow" "$@"

@@ -36,6 +36,14 @@ the invariants in ``docs/invariants.md``:
     accounting (``bytes_copied``) is a measured experiment output and
     silent copies corrupt it.
 
+``fault-point``
+    Fault-injection sites go through the public ``repro.faults`` surface —
+    ``faults.point(...)`` at the site, ``arm``/``disarm``/``armed`` around
+    it.  Importing or touching the module's internals (``_PLAN``,
+    ``_fire``, any underscore name) outside ``repro/faults.py`` builds an
+    ad-hoc ``if FAULTS:`` branch that the disarmed one-compare fast path
+    can't keep free, and that schedules can't see or count.
+
 ``suppress-justify``
     Every ``# faasmlint: disable=<rule>`` must carry a justification
     string (and name a real rule).
@@ -63,6 +71,10 @@ RULES: Dict[str, str] = {
                        "(repro/state/wire.py)"),
     "tier-copy": ("unaccounted .copy()/.tobytes()/np.copy on a tier "
                   "buffer outside the accounted primitives"),
+    "fault-point": ("fault-injection site bypassing the public "
+                    "repro.faults surface (faults.point/arm/disarm) — "
+                    "internals like _PLAN are off-limits outside "
+                    "repro/faults.py"),
     "suppress-justify": ("faasmlint suppression without a justification "
                          "(or naming an unknown rule)"),
 }
@@ -92,6 +104,13 @@ TIER_COPY_CALLS = frozenset({"copy", "tobytes"})
 # path suffixes the tier-copy rule applies to
 TIER_COPY_FILES = ("state/kv.py", "state/local.py", "core/host_interface.py")
 WIRE_HOME = "state/wire.py"          # the one module allowed to build frames
+FAULTS_HOME = "repro/faults.py"      # the one module allowed its internals
+# the public fault-injection surface; anything else from repro.faults is an
+# internal and the fault-point rule flags its use elsewhere
+FAULTS_PUBLIC = frozenset({
+    "point", "arm", "disarm", "armed", "active",
+    "FaultPlan", "FaultRule", "FaultInjected", "HostCrash", "FAULT_POINTS",
+})
 
 _DISABLE_RE = re.compile(
     r"#\s*faasmlint:\s*disable=([A-Za-z0-9_,-]+)[ \t]*(.*)")
@@ -387,8 +406,49 @@ class _FileLinter:
     def run(self) -> List[Violation]:
         tree = ast.parse(self.source, filename=self.path_str)
         self.lint_body(tree.body, None)
+        self._lint_fault_points(tree)
         self.violations.sort(key=lambda v: (v.line, v.rule))
         return self.violations
+
+    def _lint_fault_points(self, tree: ast.AST) -> None:
+        """fault-point: outside repro/faults.py, only the public surface of
+        the fault layer may be named — no ``from repro.faults import _PLAN``
+        and no ``faults._anything`` attribute reach-through (that's an
+        ad-hoc injection branch the armed/disarmed discipline can't see)."""
+        if self.path_str.endswith(FAULTS_HOME):
+            return
+        aliases: Set[str] = set()
+        for n in ast.walk(tree):
+            if isinstance(n, ast.Import):
+                for a in n.names:
+                    if a.name == "repro.faults" and a.asname:
+                        aliases.add(a.asname)
+            elif isinstance(n, ast.ImportFrom):
+                mod = n.module or ""
+                if mod == "repro" or mod.endswith("repro"):
+                    for a in n.names:
+                        if a.name == "faults":
+                            aliases.add(a.asname or "faults")
+                if mod == "repro.faults" or mod.endswith(".faults"):
+                    for a in n.names:
+                        if a.name not in FAULTS_PUBLIC:
+                            self.add(
+                                "fault-point", n.lineno,
+                                f"import of repro.faults internal "
+                                f"{a.name!r} — sites use faults.point() "
+                                f"and plans use arm()/disarm()/armed()")
+        if not aliases:
+            return
+        for n in ast.walk(tree):
+            if isinstance(n, ast.Attribute) and \
+                    isinstance(n.value, ast.Name) and \
+                    n.value.id in aliases and \
+                    n.attr not in FAULTS_PUBLIC:
+                self.add(
+                    "fault-point", n.lineno,
+                    f"reach into fault-layer internals "
+                    f"'{n.value.id}.{n.attr}' — fault sites go through "
+                    f"faults.point(...); plans through arm()/disarm()")
 
     def lint_body(self, stmts, class_name: Optional[str]) -> None:
         for st in stmts:

@@ -77,7 +77,8 @@ class Report:
 
     check: str                   # lock-order | stripe-ownership | torn-read |
     #                              wire-version | wire-window | wire-residual |
-    #                              cancel-under-lock | lock-misuse
+    #                              cancel-under-lock | lock-misuse |
+    #                              attempt-fence
     message: str
     stack: str                   # where the violation was observed
     other_stack: Optional[str] = None   # lock-order: the reverse acquisition
@@ -116,6 +117,10 @@ class _State:
         self._edges: Dict[str, Dict[str, str]] = {}
         self._gens: Dict[Tuple[int, str], int] = {}       # torn-write counters
         self._versions: Dict[Tuple[int, str], int] = {}   # last version seen
+        # attempt-fence shadow state: admitted (call, key, seq) effects and
+        # the highest superseded epoch per logical call
+        self._fence_applied: Set[Tuple[str, str, int]] = set()
+        self._fence_dead: Dict[str, int] = {}
 
     # -- reporting ---------------------------------------------------------
 
@@ -146,6 +151,8 @@ class _State:
             self._edges.clear()
             self._gens.clear()
             self._versions.clear()
+            self._fence_applied.clear()
+            self._fence_dead.clear()
 
     # -- held-lock tracking / lock-order graph -----------------------------
 
@@ -325,6 +332,39 @@ class _State:
                 "wire-residual",
                 f"residual conservation violated: max|carried + residual "
                 f"- delta| = {err:.3g} > {tol:.3g}")
+
+    # -- attempt fences ----------------------------------------------------
+
+    def fence_superseded(self, call_id: str, epoch: int) -> None:
+        """The runtime declared every epoch of ``call_id`` up to ``epoch``
+        dead (requeue past a lost host, retry past a failed dispatch)."""
+        with self._mu:
+            if epoch > self._fence_dead.get(call_id, 0):
+                self._fence_dead[call_id] = epoch
+
+    def fence_write(self, call_id: str, epoch: int, key: str, seq: int,
+                    admitted: bool) -> None:
+        """Exactly-once shadow check on every fenced delta-push decision:
+        the tier must never admit the same ``(call, key, seq)`` effect twice
+        (a re-executed attempt double-applying its delta) nor any write
+        from an epoch the runtime already superseded (a zombie attempt
+        mutating state after its requeue)."""
+        if not admitted:
+            return
+        with self._mu:
+            dup = (call_id, key, seq) in self._fence_applied
+            dead = epoch <= self._fence_dead.get(call_id, 0)
+            self._fence_applied.add((call_id, key, seq))
+        if dup:
+            self.report(
+                "attempt-fence",
+                f"delta push #{seq} on {key!r} by call {call_id} admitted "
+                f"twice (epoch {epoch}) — re-execution double-applied state")
+        if dead:
+            self.report(
+                "attempt-fence",
+                f"delta push on {key!r} admitted from superseded epoch "
+                f"{epoch} of call {call_id} — zombie attempt wrote state")
 
     # -- cancellation ------------------------------------------------------
 

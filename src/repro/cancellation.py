@@ -37,10 +37,18 @@ _SAN_GUARD: Optional[Callable[[], None]] = None
 
 
 def install(check: Callable[[], None],
-            slice_s: float = DEFAULT_SLICE_S) -> None:
+            slice_s: float = DEFAULT_SLICE_S,
+            beat: Optional[Callable[[], None]] = None) -> None:
     """Arm this thread's cancel checkpoint.  ``check`` raises (e.g.
-    ``CallCancelled``) when the current call should stop."""
+    ``CallCancelled``) when the current call should stop.
+
+    ``beat`` is an optional liveness callback (the host heartbeat) run once
+    per elapsed slice *before* the cancel check: a pure-compute loop that
+    only ever reaches these checkpoints would otherwise stop beating for
+    the whole kernel and be declared dead by any ``heartbeat_timeout``
+    shorter than one long dispatch."""
     _tls.check = check
+    _tls.beat = beat
     _tls.slice_s = slice_s
     _tls.deadline = time.monotonic() + slice_s
 
@@ -48,6 +56,7 @@ def install(check: Callable[[], None],
 def clear() -> None:
     """Disarm the checkpoint (call finished; executor thread is reused)."""
     _tls.check = None
+    _tls.beat = None
 
 
 def checkpoint() -> None:
@@ -61,4 +70,7 @@ def checkpoint() -> None:
     now = time.monotonic()
     if now >= _tls.deadline:
         _tls.deadline = now + _tls.slice_s
+        beat = getattr(_tls, "beat", None)
+        if beat is not None:
+            beat()                   # stay alive before maybe raising
         check()

@@ -1,7 +1,7 @@
 """Chained-call helpers (the paper's chain/await loops, Listing 1 pattern)."""
 from __future__ import annotations
 
-from typing import Iterable, List, Sequence
+from typing import Iterable, List, Sequence, Tuple
 
 
 def chain(api, name: str, inputs: Sequence[bytes]) -> List[int]:
@@ -21,3 +21,34 @@ def await_all(api, call_ids: Iterable[int]) -> List[int]:
 
 def outputs(api, call_ids: Iterable[int]) -> List[bytes]:
     return [api.get_call_output(cid) for cid in call_ids]
+
+
+def scatter_gather(api, name: str, inputs: Sequence[bytes], *,
+                   retries: int = 1) -> List[Tuple[int, bytes]]:
+    """Fan out one call per input and gather ``(return_code, output)`` pairs
+    in input order, re-chaining failed children up to ``retries`` times.
+
+    This is the *application-level* retry above the runtime's own
+    re-execution: the runtime requeues calls lost to host failure (with
+    attempt fencing keeping their state effects exactly-once), while this
+    helper re-submits calls that **settled as failed** — e.g. shed by a
+    degraded cluster or out of runtime retry budget.  A re-chained child is
+    a fresh call with a fresh fence, so re-running it is safe by the same
+    exactly-once argument.  Failures that persist through the budget are
+    returned, not raised: per-input isolation, the caller decides."""
+    inputs = [bytes(i) for i in inputs]
+    ids = chain(api, name, inputs)
+    codes = await_all(api, ids)
+    pending = [i for i, rc in enumerate(codes) if rc != 0]
+    for _ in range(retries):
+        if not pending:
+            break
+        retry_ids = chain(api, name, [inputs[i] for i in pending])
+        retry_codes = await_all(api, retry_ids)
+        still = []
+        for i, cid, rc in zip(pending, retry_ids, retry_codes):
+            ids[i], codes[i] = cid, rc
+            if rc != 0:
+                still.append(i)
+        pending = still
+    return [(codes[i], api.get_call_output(ids[i])) for i in range(len(ids))]

@@ -34,6 +34,7 @@ from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
+from repro import faults
 from repro.analysis.sanitizer import make_mutex
 
 WASM_PAGE = 65536
@@ -271,6 +272,7 @@ class Faaslet:
                 f"reclaim {reclaim!r} not in ('auto', 'always', 'never')")
         if reclaim == "auto":
             reclaim = "always" if pressure else "never"
+        faults.point("slow-host", host=self.host_id)
         with self._lock:
             if self._base is None:
                 raise RuntimeError("no ArenaBase bound; use restore_arena")

@@ -48,6 +48,33 @@ class FaasmAPI:
         self._dl_handles: Dict[int, str] = {}
         self._dl_counter = itertools.count(1)
         self._local_locked = {}
+        # attempt fencing: per-key 1-based sequence of this attempt's delta
+        # pushes.  A FaasmAPI is built fresh per physical execution, so a
+        # re-executed attempt restarts its sequence — identical pushes from
+        # identical (deterministic) re-runs carry identical (id, seq) pairs
+        # and the global tier admits each effect exactly once.
+        self._push_seq: Dict[str, int] = {}
+        self._dirtied: set = set()
+        # Snapshot the epoch at attempt start: a zombie attempt (host declared
+        # dead by the heartbeat monitor while it was merely slow) must keep
+        # pushing under its *own*, by-then superseded epoch — reading the
+        # shared Call object live would let it impersonate the re-execution.
+        self._fence_epoch = getattr(call, "fence_epoch", 0)
+
+    def _fence(self, key: str) -> Optional[tuple]:
+        """Fence token ``(call_id, epoch, seq)`` for the next delta push of
+        ``key``, or ``None`` for unfenced contexts (init code)."""
+        epoch = self._fence_epoch
+        if not epoch:
+            return None
+        seq = self._push_seq.get(key, 0) + 1
+        self._push_seq[key] = seq
+        return (self.call.fence_id, epoch, seq)
+
+    def dirtied_keys(self):
+        """State keys this call wrote locally (host-side cleanup of
+        un-pushed deltas when the call fails)."""
+        return tuple(self._dirtied)
 
     # ------------------------------------------------------------------ calls --
 
@@ -122,6 +149,13 @@ class FaasmAPI:
         if region is None or region.backing is not replica.buf:
             region = self.faaslet.map_shared_region(key, replica.buf,
                                                     writable=writable)
+        if writable:
+            # A writable mapping may mutate the shared replica behind the
+            # api (e.g. VectorAsync's HOGWILD add): track the key so a
+            # failed call's un-pushed deltas are discarded, not leaked into
+            # later calls on this host (``discard_unpushed`` no-ops when
+            # the replica has no dirty chunks).
+            self._dirtied.add(key)
         return self.faaslet.read(region.base, region.size)
 
     def get_state_offset(self, key: str, offset: int, length: int,
@@ -152,6 +186,7 @@ class FaasmAPI:
         finally:
             r.lock.release_write()
         lt.mark_dirty(key, 0, len(value))
+        self._dirtied.add(key)
 
     def set_state_offset(self, key: str, value: bytes, offset: int) -> None:
         value = bytes(value)
@@ -163,17 +198,20 @@ class FaasmAPI:
         finally:
             r.lock.release_write()
         lt.mark_dirty(key, offset, len(value))
+        self._dirtied.add(key)
 
     def push_state(self, key: str) -> None:
         self.check_cancelled()
         n = self._local().push(key)
         self.faaslet.usage.charge_net(n_out=n)
+        self._dirtied.discard(key)
 
     def push_state_partial(self, key: str) -> None:
         """Push only dirty chunks (what VectorAsync.push() uses)."""
         self.check_cancelled()
         n = self._local().push_dirty(key)
         self.faaslet.usage.charge_net(n_out=n)
+        self._dirtied.discard(key)
 
     def push_state_delta(self, key: str, dtype=np.float32,
                          wire: str = "auto") -> None:
@@ -187,8 +225,10 @@ class FaasmAPI:
         The network budget is charged the wire bytes actually moved, not
         the value bytes."""
         self.check_cancelled()
-        n = self._local().push_delta(key, dtype=dtype, wire=wire)
+        n = self._local().push_delta(key, dtype=dtype, wire=wire,
+                                     fence=self._fence(key))
         self.faaslet.usage.charge_net(n_out=n)
+        self._dirtied.discard(key)               # pushed (or fenced off)
 
     # -- device residency (DeviceReplica plane; transfers are intra-host) -----
 
@@ -205,11 +245,14 @@ class FaasmAPI:
         """Install a device-computed value as the replica's device copy."""
         self.check_cancelled()
         self._local().update_device(key, value)
+        self._dirtied.add(key)
 
     def state_from_device(self, key: str) -> int:
         """Sync the device value back into the shared host replica (D2H)."""
         self.check_cancelled()
-        return self._local().from_device(key)
+        n = self._local().from_device(key)
+        self._dirtied.add(key)
+        return n
 
     def pull_state(self, key: str, track_delta: bool = False,
                    wire: Optional[str] = None) -> None:

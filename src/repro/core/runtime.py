@@ -31,7 +31,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
-from repro import cancellation
+from repro import cancellation, faults
 from repro.analysis.sanitizer import make_mutex
 from repro.core.faaslet import (CONTAINER_OVERHEAD_BYTES,
                                 FAASLET_OVERHEAD_BYTES, Faaslet)
@@ -75,6 +75,13 @@ class Call:
     error: str = ""
     twin_id: Optional[int] = None                # speculative re-execution
     primary_id: Optional[int] = None             # set on twins: who to adopt into
+    # attempt fencing (exactly-once state effects): every physical execution
+    # of this logical call — first dispatch, requeue after host loss, or a
+    # speculative twin — carries a distinct epoch drawn from the *primary*
+    # call's counter.  The global tier rejects delta pushes from superseded
+    # or sealed epochs, so re-execution can't double-apply state.
+    fence_epoch: int = 0                         # epoch of the current attempt
+    _epoch_counter: int = 0                      # allocator (primaries only)
     event: threading.Event = field(default_factory=threading.Event)
     # cooperative cancel: set when this execution's speculative counterpart
     # already settled; checked by FaasmAPI at chain/await/state points
@@ -87,6 +94,20 @@ class Call:
     @property
     def latency(self) -> float:
         return (self.t_end or time.perf_counter()) - self.t_submit
+
+    @property
+    def fence_id(self) -> str:
+        """Logical-call identity for attempt fencing: a speculative twin
+        writes state under its primary's id, so both race for one fence."""
+        base = self.id if self.primary_id is None else self.primary_id
+        return f"c{base}"
+
+    def alloc_epoch(self) -> int:
+        """Next attempt epoch.  Call on the *primary* only — twins draw
+        their epochs from the primary's counter (shared fence)."""
+        with self._cb_lock:
+            self._epoch_counter += 1
+            return self._epoch_counter
 
     def add_done_callback(self, cb: Callable[["Call"], None]) -> None:
         """Run ``cb(call)`` once the call completes (immediately if done)."""
@@ -200,12 +221,22 @@ class Host:
         with self._mutex:
             if not self.alive:
                 raise RuntimeError(f"host {self.id} is down")
+            # Claim the call for this host *before* it reaches the pool:
+            # if the host dies while the call is still queued (never ran),
+            # ``_requeue_lost`` must still find and re-dispatch it.
+            call.host = self.id
             self._inflight += 1
         self.pool.submit(self._run_guarded, call)
 
     def _run_guarded(self, call: Call):
         try:
             self._run(call)
+        except faults.HostCrash:
+            # injected fail-stop: the call is NOT settled — the host dies
+            # and its in-flight work (this call included) is requeued
+            # elsewhere with a fresh fence epoch, exactly like an external
+            # ``fail_host``.  Fencing makes the re-execution exactly-once.
+            self.runtime.fail_host(self.id)
         except Exception as e:                    # defensive: never lose a call
             self.runtime._finish_call(call, rc=1, status="failed",
                                       error=f"host crash: {e!r}")
@@ -252,15 +283,23 @@ class Host:
         call.cold_start = cold
         api = FaasmAPI(faaslet, self, rt, call)
         t0 = time.perf_counter()
+        faults.point("slow-host", call=call.id, host=self.id)
         # arm the time-sliced cancel checkpoint: kernel dispatch wrappers
         # call it, so pure-compute loops between host-interface calls also
-        # honour cancel_event within a bounded slice
-        cancellation.install(api.check_cancelled)
+        # honour cancel_event within a bounded slice.  The checkpoint also
+        # beats the host heartbeat, so a long kernel loop doesn't read as a
+        # dead host to a short ``heartbeat_timeout``.
+        cancellation.install(api.check_cancelled, beat=self.beat)
         try:
             ret = fdef.fn(api)
             rc = int(ret) if ret is not None else 0
             status = "done" if rc == 0 else "failed"
             error = ""
+        except faults.HostCrash:
+            # injected fail-stop: the whole host dies with the call mid-
+            # flight — no settling, no cleanup; _run_guarded turns this
+            # into a host failure + requeue, like an external fail_host
+            raise
         except CallCancelled as e:
             # speculative counterpart already settled: stop quietly and free
             # the executor slot (the result everyone sees was adopted already)
@@ -291,6 +330,13 @@ class Host:
         if self.isolation == "container" and status != "done":
             with self._mutex:
                 self._container_tiers.pop(faaslet.id, None)
+        # failed call in faaslet mode: the host tier is shared, so it can't
+        # be dropped wholesale — instead resync any key this call dirtied
+        # but never pushed back to global truth, so a half-written delta
+        # doesn't leak into the next call's view (or a later push)
+        if self.isolation == "faaslet" and status != "done":
+            for k in api.dirtied_keys():
+                self.local_tier.discard_unpushed(k)
 
         # §5.2: reset from Proto-Faaslet so no private data leaks across
         # calls — O(dirty pages) when the Faaslet carries a CoW base
@@ -386,13 +432,19 @@ class FaasmRuntime:
                  chunk_size: int = 1 << 20,
                  straggler_timeout: Optional[float] = None,
                  heartbeat_timeout: Optional[float] = None,
-                 reclaim: str = "auto"):
+                 reclaim: str = "auto",
+                 max_retries: int = 2, backoff: float = 0.005):
         # heartbeat_timeout: when set, the background monitor declares hosts
         # silent for that long (with calls in flight) dead and requeues their
-        # work.  Opt-in: a host only beats at call boundaries, so any timeout
-        # shorter than a legitimate call would hard-fail a healthy host.
+        # work.  Opt-in: a host only beats at call boundaries (and at kernel
+        # cancellation checkpoints), so any timeout shorter than a legitimate
+        # call would hard-fail a healthy host.
+        # max_retries: re-execution budget per call beyond the first attempt
+        # (host loss or dispatch failure); backoff: base of the exponential
+        # re-dispatch delay (attempt n sleeps backoff * 2^(n-1), capped).
         assert isolation in ("faaslet", "container")
         assert reclaim in ("auto", "always", "never")
+        assert max_retries >= 0 and backoff >= 0.0
         self.isolation = isolation
         self.reclaim = reclaim
         self.use_proto = use_proto and isolation == "faaslet"
@@ -411,7 +463,9 @@ class FaasmRuntime:
         self._net: Dict[tuple, queue.Queue] = defaultdict(queue.Queue)
         self.straggler_timeout = straggler_timeout
         self.heartbeat_timeout = heartbeat_timeout
-        self.max_attempts = 3
+        self.max_retries = max_retries
+        self.backoff = backoff
+        self.max_attempts = max_retries + 1
         for i in range(n_hosts):
             self.add_host(capacity=capacity)
         # Background monitor: straggler speculation + heartbeat failure
@@ -588,6 +642,7 @@ class FaasmRuntime:
         n = len(pool)
         for i, c in enumerate(calls):
             c.attempts += 1
+            self._assign_epoch(c)
             if pinned is not None:
                 # first pinned holder with capacity; when every holder is
                 # saturated, round-robin the queueing across the holder set
@@ -601,6 +656,20 @@ class FaasmRuntime:
             except Exception:
                 self._dispatch(c)            # full path: re-place or fail
 
+    def _assign_epoch(self, call: Call) -> None:
+        """Stamp this physical dispatch with a fresh fence epoch, always
+        drawn from the primary call's allocator (twins share the fence)."""
+        owner = call
+        if call.primary_id is not None:
+            owner = self._calls.get(call.primary_id, call)
+        call.fence_epoch = owner.alloc_epoch()
+
+    def _retry_backoff(self, attempts: int) -> None:
+        """Exponential re-dispatch delay: attempt n waits backoff·2^(n-1),
+        capped at 250 ms so a lost host never stalls recovery for long."""
+        if self.backoff > 0.0 and attempts > 0:
+            time.sleep(min(self.backoff * (2 ** (attempts - 1)), 0.25))
+
     def _dispatch(self, call: Call) -> None:
         alive = self.alive_hosts()
         if not alive:
@@ -612,12 +681,14 @@ class FaasmRuntime:
         if not target.alive:
             target = entry
         call.attempts += 1
+        self._assign_epoch(call)
         try:
             target.submit(call)
         except Exception as e:
             # target died between placement and submit: retry elsewhere, and
             # never leave the call pending (a waiter would hang forever)
             if call.attempts < self.max_attempts:
+                self._retry_backoff(call.attempts)
                 self._dispatch(call)
             else:
                 self._finish_call(call, status="failed",
@@ -667,6 +738,11 @@ class FaasmRuntime:
         first = call._settle(mutate)
         with self._mutex:
             self._active.discard(call.id)
+        # exactly-once: the winning settle seals the call's fence, so any
+        # still-running attempt (a speculative loser, a zombie on a host
+        # declared dead) gets its remaining pushes rejected by the tier
+        if first and call.status == "done" and call.fence_epoch:
+            self.global_tier.fence_seal(call.fence_id, call.fence_epoch)
         # speculation cleanup: the first 'done' of a speculative pair cancels
         # the counterpart, so the straggler stops at its next host-interface
         # checkpoint instead of running to completion in an executor slot
@@ -714,8 +790,15 @@ class FaasmRuntime:
                     c, status="failed",
                     error=f"host {host_id} lost, retries exhausted")
             else:
+                # fence off the lost attempt BEFORE re-dispatching: any
+                # straggling push from the dead host's epoch (e.g. a frame
+                # delayed on the wire) must lose to the re-execution
+                if c.fence_epoch:
+                    self.global_tier.fence_supersede(c.fence_id,
+                                                     c.fence_epoch)
                 c.status = "pending"
                 c.host = None
+                self._retry_backoff(c.attempts)
                 self._dispatch(c)
 
     def _speculate(self, call: Call) -> bool:
@@ -728,6 +811,10 @@ class FaasmRuntime:
                     parent=call.parent, t_submit=time.perf_counter())
         twin.attempts = call.attempts
         twin.primary_id = call.id
+        # the twin writes state under the primary's fence with its own
+        # epoch: whichever attempt settles first seals the fence, and the
+        # loser's in-flight pushes are dropped instead of double-applied
+        twin.fence_epoch = call.alloc_epoch()
         with self._mutex:
             self._calls[twin.id] = twin
             self._active.add(twin.id)

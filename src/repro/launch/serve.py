@@ -75,9 +75,53 @@ def make_infer_function(model, treedef, host_leaves, prompt_len: int = 16,
     return FunctionDef("infer", infer, init_fn=init)
 
 
+SHED_RC = -2          # return code for requests shed by a degraded cluster
+_SHED_CHUNK = 32      # degradation re-check granularity within one wave
+
+
+def submit_degradable(rt, fn: str, payloads, *, min_alive_hosts: int = 1,
+                      state_hint=None, timeout: float = 600.0) -> dict:
+    """Submit a request wave with fail-fast shedding (graceful degradation).
+
+    A healthy cluster takes the whole wave through the batched
+    ``invoke_many`` path.  Once the alive-host count drops below
+    ``min_alive_hosts`` the cluster is **degraded**: requests from that
+    point on are shed immediately (code :data:`SHED_RC`, never queued)
+    instead of piling onto the survivors — a bounded brown-out in place of
+    a collapse.  The wave is submitted in :data:`_SHED_CHUNK`-sized slices
+    so a host dying mid-wave starts shedding within one slice, not after
+    the whole wave queued.
+
+    Returns ``{"codes": [...], "call_ids": [...], "shed": n,
+    "degraded": bool}`` — ``call_ids[i]`` is ``None`` for shed requests.
+    Shed requests are the caller's to retry (e.g.
+    ``repro.core.chain.scatter_gather``) once capacity returns.
+    """
+    n = len(payloads)
+    codes: list = [SHED_RC] * n
+    call_ids: list = [None] * n
+    degraded = False
+    submitted: list = []                 # (index, call_id)
+    for lo in range(0, n, _SHED_CHUNK):
+        chunk = payloads[lo:lo + _SHED_CHUNK]
+        if len(rt.alive_hosts()) < min_alive_hosts:
+            degraded = True              # fail fast: shed the rest of the slice
+            continue
+        cids = rt.invoke_many(fn, chunk, state_hint=state_hint)
+        submitted.extend(zip(range(lo, lo + len(chunk)), cids))
+    if submitted:
+        rcs = rt.wait_all([c for _, c in submitted], timeout=timeout)
+        for (i, cid), rc in zip(submitted, rcs):
+            codes[i], call_ids[i] = rc, cid
+    shed = sum(1 for c in call_ids if c is None)
+    return {"codes": codes, "call_ids": call_ids, "shed": shed,
+            "degraded": degraded or shed > 0}
+
+
 def run_faasm_fanout(model, params, vocab_size: int, n_requests: int,
                      prompt_len: int = 16, n_hosts: int = 1,
-                     capacity: int = 8, state_wire: str = None) -> dict:
+                     capacity: int = 8, state_wire: str = None,
+                     min_alive_hosts: int = 1) -> dict:
     """Serve ``n_requests`` single-shot requests through the FAASM runtime.
 
     Each request is one Faaslet call running the jitted forward pass; the
@@ -110,15 +154,18 @@ def run_faasm_fanout(model, params, vocab_size: int, n_requests: int,
                                    state_hint=hint), timeout=300)
         rt.global_tier.reset_metrics()
         t0 = time.perf_counter()
-        cids = rt.invoke_many("infer", payloads, state_hint=hint)
-        rcs = rt.wait_all(cids, timeout=600)
+        wave = submit_degradable(rt, "infer", payloads,
+                                 min_alive_hosts=min_alive_hosts,
+                                 state_hint=hint, timeout=600)
         wall = time.perf_counter() - t0
-        assert all(r == 0 for r in rcs), rcs
-        lat_ms = np.asarray([rt.call(c).latency for c in cids]) * 1e3
+        served = [c for c in wave["call_ids"] if c is not None]
+        assert all(r in (0, SHED_RC) for r in wave["codes"]), wave["codes"]
+        lat_ms = np.asarray([rt.call(c).latency for c in served]) * 1e3
         out = {"requests": n_requests, "wall_s": wall,
-               "throughput_rps": n_requests / wall,
-               "p50_ms": float(np.percentile(lat_ms, 50)),
-               "p99_ms": float(np.percentile(lat_ms, 99))}
+               "throughput_rps": len(served) / wall,
+               "p50_ms": float(np.percentile(lat_ms, 50)) if served else 0.0,
+               "p99_ms": float(np.percentile(lat_ms, 99)) if served else 0.0,
+               "degraded": wave["degraded"], "shed": wave["shed"]}
         if state_wire is not None:
             out["state_wire"] = state_wire
             out["state_push_mb"] = sum(
@@ -140,6 +187,9 @@ def main():
                     help="also fan out N requests through the FAASM runtime "
                          "(invoke_many/wait_all batch path)")
     ap.add_argument("--faasm-hosts", type=int, default=1)
+    ap.add_argument("--min-alive-hosts", type=int, default=1,
+                    help="graceful-degradation floor: shed requests (fail "
+                         "fast) once fewer hosts than this are alive")
     ap.add_argument("--state-wire", choices=("auto", "exact", "int8"),
                     default=None,
                     help="track shared serving stats through the state tier "
@@ -200,10 +250,14 @@ def main():
         r = run_faasm_fanout(model, params, cfg.vocab_size,
                              args.faasm_requests, prompt_len=S,
                              n_hosts=args.faasm_hosts,
-                             state_wire=args.state_wire)
+                             state_wire=args.state_wire,
+                             min_alive_hosts=args.min_alive_hosts)
         print(f"faasm fan-out: {r['requests']} reqs in {r['wall_s']:.2f}s "
               f"({r['throughput_rps']:.1f} req/s) "
               f"p50={r['p50_ms']:.1f}ms p99={r['p99_ms']:.1f}ms")
+        if r.get("degraded"):
+            print(f"  DEGRADED: {r['shed']} requests shed (alive hosts "
+                  f"below --min-alive-hosts={args.min_alive_hosts})")
         if "state_push_mb" in r:
             print(f"  serve/stats pushes ({r['state_wire']} wire): "
                   f"{r['state_push_mb']:.2f}MB to the global tier")

@@ -60,6 +60,7 @@ DEFAULT_CHUNK = 1 << 20          # 1 MiB state chunks
 DEFAULT_STRIPES = 64
 DEFAULT_DELTA_WINDOW = 8         # retained wire frames per key (delta pulls)
 DEFAULT_DELTA_WINDOW_BYTES = 32 << 20   # per-key byte cap on retained frames
+FENCE_CAP = 4096                 # retained sealed fence records (see _Fence)
 
 
 class RWLock:
@@ -194,6 +195,24 @@ def _as_u8(a: np.ndarray) -> np.ndarray:
     return a.reshape(-1).view(np.uint8)
 
 
+@dataclass
+class _Fence:
+    """Attempt-fence record for one logical call (see docs/fault_model.md).
+
+    Delta pushes are additive, so a re-executed attempt (requeue after host
+    death, straggler speculation) would double-apply its deltas.  Each
+    physical attempt carries a fence token ``(call_id, epoch, seq)``; the
+    tier admits a push iff the epoch is not superseded (``dead_epoch``),
+    the call is not sealed to a different epoch (first settle wins), and
+    the per-key effect sequence is fresh (``seq`` > high-water).  Assumes
+    deterministic functions: attempt N's i-th push to a key carries the
+    same delta as attempt M's, so dropping duplicates converges."""
+
+    dead_epoch: int = 0              # epochs <= this are superseded (requeue)
+    sealed: Optional[int] = None     # post-settle: only this epoch may write
+    hw: Dict[str, int] = field(default_factory=dict)   # key -> applied seq
+
+
 class GlobalTier:
     """In-memory stand-in for the distributed KVS backing the global tier.
 
@@ -212,9 +231,63 @@ class GlobalTier:
         self.delta_window = max(0, delta_window)
         self.delta_window_bytes = delta_window_bytes
         self._stripes = [_Stripe() for _ in range(self.n_stripes)]
+        # attempt fences: logical-call write admission (innermost lock kind;
+        # taken under a key write lock on the push path, never the reverse)
+        self._fence_mu = make_mutex("fence")
+        self._fences: Dict[str, _Fence] = {}
+        self._fence_sealed: deque = deque()    # FIFO of sealed ids to prune
 
     def _stripe(self, key: str) -> _Stripe:
         return self._stripes[zlib.crc32(key.encode()) % self.n_stripes]
+
+    # -- attempt fences -----------------------------------------------------
+
+    def fence_admit(self, key: str, fence: Tuple[str, int, int]) -> bool:
+        """Admission check for a fenced delta push.
+
+        ``fence`` is ``(call_id, epoch, seq)``: the logical call (a twin
+        uses its primary's id), the physical attempt's epoch, and the
+        attempt-local 1-based sequence of this push on this key.  Rejected
+        pushes (superseded epoch, sealed to another epoch, or duplicate
+        ``seq``) must perform no tier effect.  Competing pushes to the same
+        key already serialise on the key's global write lock, so the check
+        is atomic with the apply that follows it."""
+        call_id, epoch, seq = fence
+        with self._fence_mu:
+            f = self._fences.get(call_id)
+            if f is None:
+                f = self._fences[call_id] = _Fence()
+            admitted = not (epoch <= f.dead_epoch
+                            or (f.sealed is not None and epoch != f.sealed)
+                            or seq <= f.hw.get(key, 0))
+            if admitted:
+                f.hw[key] = seq
+        if _SAN is not None:
+            _SAN.fence_write(call_id, epoch, key, seq, admitted)
+        return admitted
+
+    def fence_supersede(self, call_id: str, epoch: int) -> None:
+        """Every epoch of ``call_id`` up to and including ``epoch`` is dead:
+        the runtime requeued or retried past it, so late writes from those
+        attempts must be rejected (the host they ran on is gone)."""
+        with self._fence_mu:
+            f = self._fences.setdefault(call_id, _Fence())
+            f.dead_epoch = max(f.dead_epoch, epoch)
+        if _SAN is not None:
+            _SAN.fence_superseded(call_id, epoch)
+
+    def fence_seal(self, call_id: str, epoch: int) -> None:
+        """The call settled with ``epoch``'s result: no other attempt may
+        write its state again (a racing speculation loser pushes into a
+        sealed fence and is dropped).  Sealed records are pruned FIFO past
+        ``FENCE_CAP`` — a straggler older than that is long cancelled."""
+        with self._fence_mu:
+            f = self._fences.setdefault(call_id, _Fence())
+            if f.sealed is None:
+                f.sealed = epoch
+                self._fence_sealed.append(call_id)
+                while len(self._fence_sealed) > FENCE_CAP:
+                    self._fences.pop(self._fence_sealed.popleft(), None)
 
     # -- basic KV -----------------------------------------------------------
 
@@ -426,7 +499,8 @@ class GlobalTier:
 
     def add_inplace(self, key: str, local: np.ndarray,
                     base: Optional[np.ndarray] = None, *,
-                    host: str = "?", return_version: bool = False):
+                    host: str = "?", return_version: bool = False,
+                    fence: Optional[Tuple[str, int, int]] = None):
         """HOGWILD delta push computed in place in the global buffer:
         ``global += local`` then ``global -= base`` — no value-sized copy at
         all (``bytes_copied`` does not move).  ``local``/``base`` are typed
@@ -439,6 +513,8 @@ class GlobalTier:
         re-pull."""
         dtype = local.dtype
         itemsize = dtype.itemsize
+        if fence is not None and not self.fence_admit(key, fence):
+            return None                      # superseded/duplicate attempt
         s = self._stripe(key)
         with s.lock:
             if _SAN is not None:
@@ -464,7 +540,8 @@ class GlobalTier:
         return moved
 
     def apply_wire(self, key: str, frame: WireFrame, *,
-                   host: str = "?", origin: Optional[str] = None) -> int:
+                   host: str = "?", origin: Optional[str] = None,
+                   fence: Optional[Tuple[str, int, int]] = None):
         """Land a push-direction wire frame in the global buffer.
 
         The frame decodes to a flat f32 delta; the overlap with the stored
@@ -485,8 +562,11 @@ class GlobalTier:
         window is invalidated instead of fed: write-only keys retain
         nothing.  Callers serialise under the key's global write lock and
         fan the stamped frame out with :meth:`broadcast` *after* releasing
-        it."""
+        it.  A fenced push from a superseded or duplicate attempt performs
+        no effect and returns ``None`` (see :meth:`fence_admit`)."""
         dt = np.dtype(frame.dtype)
+        if fence is not None and not self.fence_admit(key, fence):
+            return None                      # superseded/duplicate attempt
         delta = frame.decode()                   # numpy; outside no locks yet
         wire = frame.nbytes
         s = self._stripe(key)

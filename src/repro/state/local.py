@@ -52,12 +52,18 @@ from typing import Any, Dict, Optional, Set
 
 import numpy as np
 
+from repro import faults
 from repro.analysis.sanitizer import make_mutex, wrap_rwlock
 from repro.state.kv import GlobalTier, RWLock
 from repro.state.wire import (INT8_WIRE_MIN_BYTES, WireFrame, WirePolicy,
                               get_codec)
 
 __all__ = ["DeviceReplica", "INT8_WIRE_MIN_BYTES", "LocalTier", "Replica"]
+
+
+class CodecFallback(Exception):
+    """Internal: the int8 encode failed mid-push; ``push_delta`` retries the
+    same delta (same fence token) on the exact wire so no state is lost."""
 
 # repro.analysis.sanitizer installs its hook state here (enable()); None
 # compiles every check in this module down to one pointer compare
@@ -134,6 +140,7 @@ class LocalTier:
         self._policies: Dict[str, WirePolicy] = {}
         self._subscribed: Set[str] = set()
         self._mutex = make_mutex("tier", f"tier:{host_id}")
+        self.codec_fallbacks = 0         # int8 encodes rescued by the exact wire
 
     # -- replica lifecycle ------------------------------------------------------
 
@@ -338,6 +345,10 @@ class LocalTier:
         out-of-order race between two pushers, a duplicate) is skipped —
         the next pull repairs it through the delta window.  Raising (e.g.
         the replica was evicted) drops the subscription tier-side."""
+        if faults.point("wire-frame-drop", key=key, host=self.host_id):
+            return                       # frame lost on the wire to this peer
+        faults.point("wire-frame-delay", key=key, host=self.host_id)
+        faults.point("subscriber-raise", key=key, host=self.host_id)
         with self._mutex:
             r = self._replicas.get(key)
         if r is None:
@@ -412,6 +423,7 @@ class LocalTier:
         the f32 delta), falling back to a full pull when the base predates
         the retained delta window.  Pull-side quantisation error is carried
         per replica as an error-feedback residual into the next delta pull."""
+        faults.point("tier-pull-stall", key=key, host=self.host_id)
         size = self.global_tier.size(key)
         r = self.replica(key, size)
         moved = 0
@@ -554,6 +566,56 @@ class LocalTier:
         r.dirty_chunks.clear()
         return moved
 
+    def _resync_locked(self, key: str, r: Replica) -> None:
+        """Throw away the replica's local divergence and re-pull the global
+        truth (replica write lock held by the caller).
+
+        Used when the replica's content can no longer be trusted to feed a
+        delta push: a fenced-out push (the winning attempt's equivalent
+        delta is — or will be — the global content; keeping ours would
+        double-apply it on the next broadcast/pull) and a failed call's
+        un-pushed dirty writes (:meth:`discard_unpushed`).  The full pull
+        re-stamps the delta base, clears the dirty record and drops both
+        error-feedback residuals; a bound device replica is marked stale so
+        its next use re-syncs from the host buffer."""
+        if _SAN is not None:
+            _SAN.assert_write_held(r.lock, "_resync_locked")
+        size = self.global_tier.size(key)
+        self._full_pull_locked(key, r, size, refresh_base=r.base is not None)
+        r.full = True
+        r.present_chunks = set(range(self.global_tier.n_chunks(key)))
+        r.dirty_chunks.clear()
+        r.residual = None
+        d = r.device
+        if d is not None:
+            d.synced_version = -1
+            d.device_dirty = False
+            d.residual = None
+            d.base = None
+
+    def discard_unpushed(self, key: str) -> bool:
+        """Drop a replica's un-pushed local writes (failed/cancelled call).
+
+        The container path already discards its whole private tier on a
+        failed settle; warm faaslet-mode replicas are shared, so a failed
+        call's half-written dirty chunks would otherwise survive and be
+        served by the next pull.  Granularity is the replica: a concurrent
+        call's not-yet-pushed writes to the *same* key are discarded too
+        (both re-pull; pushed state is never touched).  Returns True when
+        there was anything to discard."""
+        with self._mutex:
+            r = self._replicas.get(key)
+        if r is None:
+            return False
+        r.lock.acquire_write()
+        try:
+            if not r.dirty_chunks:
+                return False
+            self._resync_locked(key, r)
+            return True
+        finally:
+            r.lock.release_write()
+
     @staticmethod
     def _refresh_base(r: Replica) -> None:
         """Re-stamp the delta base from the buffer (replica write lock held
@@ -597,7 +659,8 @@ class LocalTier:
             r.lock.release_write()
 
     def push_delta(self, key: str, dtype=np.float32, *, wire: str = "exact",
-                   backend: Optional[str] = None) -> int:
+                   backend: Optional[str] = None,
+                   fence: Optional[tuple] = None) -> int:
         """Accumulating push: global += (local − base), then refresh base.
 
         The cross-host-safe HOGWILD push: concurrent pushes from different
@@ -625,7 +688,13 @@ class LocalTier:
         dispatch — runs *before* the global lock is taken, so concurrent
         pushers of the same key from different hosts pipeline their encodes
         and only the cheap wire apply serialises.  Broadcast fan-out runs
-        with no locks held."""
+        with no locks held.
+
+        ``fence`` is an attempt-fence token ``(call_id, epoch, seq)`` (see
+        ``GlobalTier.fence_admit``): a push from a superseded or duplicate
+        attempt performs no global effect, resynchronises the replica from
+        the global truth, and returns 0."""
+        faults.point("host-crash-pre-push", key=key, host=self.host_id)
         r = self._replicas[key]
         gt = self.global_tier
         dt = np.dtype(dtype)
@@ -634,18 +703,40 @@ class LocalTier:
             wire = self.wire_policy(key).select(r.buf.size, dt)
         if wire not in ("exact", "int8"):
             raise ValueError(f"wire {wire!r} not in ('exact', 'int8', 'auto')")
+        exact_framed = (dt == np.float32 and gt.delta_window > 0
+                        and gt.wire_interest(key, exclude=self.origin_id))
         if (wire == "int8" and dt.kind == "f"
                 and r.buf.size >= INT8_WIRE_MIN_BYTES):
-            return self._push_delta_int8(key, r, dt, backend, auto=auto)
-        if (dt == np.float32 and gt.delta_window > 0
-                and gt.wire_interest(key, exclude=self.origin_id)):
-            return self._push_delta_exact_f32(key, r, backend, auto=auto)
-        # non-f32 dtypes — and f32 nobody else consumes frames of (no warm
-        # puller, no subscriber) or with the window disabled: the zero-copy
-        # fast path.  No frame is materialised, nothing retained; the tier
-        # invalidates the key's window.  The first consumer to appear
-        # full-pulls once and declares interest, flipping later pushes onto
-        # the frame path.
+            try:
+                moved = self._push_delta_int8(key, r, dt, backend, auto=auto,
+                                              fence=fence)
+            except CodecFallback:
+                # the quantised encode failed before any tier effect: the
+                # delta must not be lost — re-push it on the exact wire with
+                # the same fence token
+                self.codec_fallbacks += 1
+                if exact_framed:
+                    moved = self._push_delta_exact_f32(key, r, backend,
+                                                       fence=fence)
+                else:
+                    moved = self._push_delta_inplace(key, r, dt, fence=fence)
+        elif exact_framed:
+            moved = self._push_delta_exact_f32(key, r, backend, auto=auto,
+                                               fence=fence)
+        else:
+            moved = self._push_delta_inplace(key, r, dt, fence=fence)
+        faults.point("host-crash-post-push", key=key, host=self.host_id)
+        return moved
+
+    def _push_delta_inplace(self, key: str, r: Replica, dt: np.dtype, *,
+                            fence: Optional[tuple] = None) -> int:
+        """The zero-copy fast path: non-f32 dtypes — and f32 nobody else
+        consumes frames of (no warm puller, no subscriber) or with the
+        window disabled.  No frame is materialised, nothing retained; the
+        tier invalidates the key's window.  The first consumer to appear
+        full-pulls once and declares interest, flipping later pushes onto
+        the frame path."""
+        gt = self.global_tier
         r.lock.acquire_write()
         try:
             local = r.buf.view(dt)
@@ -654,11 +745,15 @@ class LocalTier:
             lock = gt.lock(key)
             lock.acquire_write()
             try:
-                moved, prev, new = gt.add_inplace(
+                res = gt.add_inplace(
                     key, local, base, host=self.host_id,
-                    return_version=True)
+                    return_version=True, fence=fence)
             finally:
                 lock.release_write()
+            if res is None:              # fenced out: superseded/duplicate
+                self._resync_locked(key, r)
+                return 0
+            moved, prev, new = res
             self._refresh_base(r)
             r.dirty_chunks.clear()
             # the pusher's buffer is the post-push content: keep its base
@@ -672,7 +767,8 @@ class LocalTier:
 
     def _push_delta_exact_f32(self, key: str, r: Replica,
                               backend: Optional[str], *,
-                              auto: bool = False) -> int:
+                              auto: bool = False,
+                              fence: Optional[tuple] = None) -> int:
         """Exact f32 push as a wire frame: the delta is materialised once,
         accumulated in place in the global buffer, retained in the key's
         delta window and broadcast to subscribed peers.  Any error-feedback
@@ -722,9 +818,16 @@ class LocalTier:
         lock.acquire_write()
         try:
             moved = gt.apply_wire(key, frame, host=self.host_id,
-                                  origin=self.origin_id)
+                                  origin=self.origin_id, fence=fence)
         finally:
             lock.release_write()
+        if moved is None:                # fenced out: superseded/duplicate
+            r.lock.acquire_write()
+            try:
+                self._resync_locked(key, r)
+            finally:
+                r.lock.release_write()
+            return 0
         self._after_push(key, r, frame)
         if auto:
             # adaptive feedback only when the policy made the choice: forced
@@ -737,7 +840,8 @@ class LocalTier:
 
     def _push_delta_int8(self, key: str, r: Replica, dt: np.dtype,
                          backend: Optional[str], *,
-                         auto: bool = False) -> int:
+                         auto: bool = False,
+                         fence: Optional[tuple] = None) -> int:
         """Quantised delta push: encode under the replica write lock, apply
         under the key's global write lock, broadcast with no locks held.
 
@@ -769,7 +873,10 @@ class LocalTier:
                 # codec.encode materialises the frame (np.asarray blocks on
                 # the dispatched kernels), so nothing in flight still reads
                 # r.base when _refresh_base mutates it below
-                frame, residual = codec.encode(eff, base, backend=backend)
+                try:
+                    frame, residual = codec.encode(eff, base, backend=backend)
+                except Exception as e:
+                    raise CodecFallback(e) from e
                 d.residual = residual
                 d.base = local               # device snapshot: a rebind
                 # d.value mirrors the host buffer only when no device-side
@@ -785,7 +892,10 @@ class LocalTier:
                 if r.residual is None or r.residual.size != local.size:
                     r.residual = np.zeros(local.size, np.float32)
                 eff = local.astype(np.float32) + r.residual
-                frame, residual = codec.encode(eff, base, backend=backend)
+                try:
+                    frame, residual = codec.encode(eff, base, backend=backend)
+                except Exception as e:
+                    raise CodecFallback(e) from e
                 # owned writable copy: np.asarray of a jax array is read-only
                 # and would alias the device buffer
                 r.residual = np.array(residual, dtype=np.float32)
@@ -800,9 +910,16 @@ class LocalTier:
         lock.acquire_write()
         try:
             moved = gt.apply_wire(key, frame, host=self.host_id,
-                                  origin=self.origin_id)
+                                  origin=self.origin_id, fence=fence)
         finally:
             lock.release_write()
+        if moved is None:                # fenced out: superseded/duplicate
+            r.lock.acquire_write()
+            try:
+                self._resync_locked(key, r)
+            finally:
+                r.lock.release_write()
+            return 0
         self._after_push(key, r, frame)
         if auto:
             # adaptive feedback (policy-chosen pushes only): what the

@@ -43,6 +43,8 @@ from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
+from repro import faults
+
 WIRES = ("exact", "int8")
 
 # repro.analysis.sanitizer installs its hook state here (enable()); None
@@ -128,6 +130,7 @@ class Int8Codec:
                backend: Optional[str] = None) -> Tuple[WireFrame, Any]:
         from repro.kernels.state_push import ops
 
+        faults.point("codec-error")
         q, s, n = ops.quantize_delta(eff, base, backend=backend)
         deq = ops.dequantize(q, s, n)
         residual = (eff - base).reshape(-1)[:n] - deq

@@ -29,6 +29,15 @@ def pytest_collection_modifyitems(config, items):
 
 
 @pytest.fixture(autouse=True)
+def _faults_disarmed():
+    """Safety net: no fault plan leaks from one test into the next (a
+    leaked plan would make unrelated tests fail nondeterministically)."""
+    from repro import faults
+    yield
+    faults.disarm()
+
+
+@pytest.fixture(autouse=True)
 def _faasm_sanitize(request):
     """Per-test sanitizer lifecycle (see module docstring)."""
     marked = request.node.get_closest_marker("sanitize") is not None

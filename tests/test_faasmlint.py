@@ -150,6 +150,47 @@ def test_tier_copy_out_of_scope_file():
     assert lint_source(code, "core/scheduler.py") == []
 
 
+# -- fault-point ------------------------------------------------------------
+
+def test_fault_point_internal_import_seeded():
+    code = (
+        "from repro.faults import _PLAN\n"
+        "def bad():\n"
+        "    return _PLAN is not None\n"
+    )
+    assert rules_of(lint_source(code, "state/local.py")) == {"fault-point"}
+
+
+def test_fault_point_attribute_reach_seeded():
+    code = (
+        "from repro import faults\n"
+        "def bad(key):\n"
+        "    if faults._PLAN is not None:\n"
+        "        faults._PLAN._fire('wire-frame-drop', None, key, None)\n"
+    )
+    vs = lint_source(code, "state/local.py")
+    assert rules_of(vs) == {"fault-point"}
+    assert [v.line for v in vs] == [3, 4]
+
+
+def test_fault_point_clean_idiom_and_home_exempt():
+    clean = (
+        "from repro import faults\n"
+        "def site(key, host):\n"
+        "    if faults.point('wire-frame-drop', key=key, host=host):\n"
+        "        return\n"
+        "def harness(plan):\n"
+        "    with faults.armed(plan):\n"
+        "        pass\n"
+        "    faults.arm(plan); faults.disarm()\n"
+        "    return faults.active(), faults.FAULT_POINTS\n"
+    )
+    assert lint_source(clean, "state/local.py") == []
+    # the faults module itself is allowed its own internals
+    internal = "def arm(plan):\n    global _PLAN\n    _PLAN = plan\n"
+    assert lint_source(internal, "repro/faults.py") == []
+
+
 # -- suppressions -----------------------------------------------------------
 
 def test_suppression_without_justification_is_a_violation():
@@ -200,5 +241,5 @@ def test_cli_exits_zero_on_src():
 
 def test_every_rule_is_documented():
     assert set(RULES) == {"stripe-access", "lock-blocking", "wire-construct",
-                          "tier-copy", "suppress-justify"}
+                          "tier-copy", "fault-point", "suppress-justify"}
     assert all(RULES.values())

@@ -217,6 +217,30 @@ def test_seeded_residual_conservation_violation():
 
 
 @pytest.mark.sanitize
+def test_seeded_attempt_fence_violations():
+    st = sanitizer.enable()
+    # same (call, key, seq) admitted twice: a re-execution double-applied
+    st.fence_write("c1", 1, "k", 1, True)
+    st.fence_write("c1", 2, "k", 1, True)
+    # a write admitted from an epoch the runtime already superseded: zombie
+    st.fence_superseded("c2", 3)
+    st.fence_write("c2", 3, "k", 1, True)
+    reports = sanitizer.take_reports()
+    assert checks_of(reports) == {"attempt-fence"}
+    assert len(reports) == 2
+    assert any("double-applied" in r.message for r in reports)
+    assert any("zombie" in r.message for r in reports)
+    # the healthy traces are clean: a rejected duplicate, a fresh seq, and
+    # a live (not yet superseded) epoch
+    st.fence_write("c3", 1, "k", 1, True)
+    st.fence_write("c3", 2, "k", 1, False)          # tier rejected the dup
+    st.fence_write("c3", 2, "k", 2, True)
+    st.fence_superseded("c4", 1)
+    st.fence_write("c4", 2, "k", 1, True)
+    assert sanitizer.take_reports() == []
+
+
+@pytest.mark.sanitize
 def test_seeded_cancellation_checkpoint_under_stripe_lock():
     gt = GlobalTier()
     s = gt._stripe("w")
