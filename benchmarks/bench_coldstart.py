@@ -264,6 +264,81 @@ def _bench_pull_wire() -> dict:
     return rows
 
 
+def _bench_codec_trace() -> dict:
+    """``--trace``: arm the telemetry plane and derive the int8-vs-exact
+    encode-cost curve per value size from the flight recorder — every row
+    comes from ``wire.push`` span tags (``encode_ns``, ``nbytes``, span
+    wall), not from ad-hoc timers around the push loop.  Written to
+    ``BENCH_codec.json``."""
+    from repro import telemetry
+
+    sizes_kb = (64, 256, 1024, 4096)
+    n_pushes = 8
+    curve = {}
+    t = telemetry.enable()
+    try:
+        for kb in sizes_kb:
+            n = (kb << 10) // 4
+            rng = np.random.default_rng(kb)
+            updates = [(rng.normal(size=n) * 0.01).astype(np.float32)
+                       for _ in range(n_pushes)]
+            row = {}
+            for wire in ("exact", "int8"):
+                gt = GlobalTier()
+                gt.set("w", np.zeros(n, np.float32).tobytes(), host="up")
+                lt = LocalTier("h0", gt)
+                lt.pull("w")
+                lt.snapshot_base("w")
+                LocalTier("q", gt).pull("w")       # wire interest: frame it
+                view = lt.replica("w").buf.view(np.float32)
+                view[:] += updates[0]
+                lt.push_delta("w", wire=wire)     # warm the kernel/jit path
+                t.drain()                          # discard warm-up spans
+                for u in updates:
+                    view[:] += u
+                    lt.push_delta("w", wire=wire)
+                pushes = [s for s in t.drain() if s.name == "wire.push"]
+                assert len(pushes) == n_pushes, (wire, kb, len(pushes))
+                assert all(s.tags["wire"] == wire for s in pushes)
+                enc_us = sorted(s.tags["encode_ns"] / 1e3 for s in pushes)
+                wall_us = sorted(s.dur * 1e6 for s in pushes)
+                row[wire] = {
+                    "pushes": n_pushes,
+                    "encode_us_p50": enc_us[n_pushes // 2],
+                    "push_us_p50": wall_us[n_pushes // 2],
+                    "bytes_per_push": sum(s.tags["nbytes"]
+                                          for s in pushes) / n_pushes,
+                }
+            row["encode_ratio_int8_vs_exact"] = (
+                row["int8"]["encode_us_p50"]
+                / max(row["exact"]["encode_us_p50"], 1e-9))
+            row["bytes_ratio_int8_vs_exact"] = (
+                row["int8"]["bytes_per_push"]
+                / max(row["exact"]["bytes_per_push"], 1e-9))
+            curve[f"{kb}kb"] = row
+    finally:
+        telemetry.disable()
+    return {"value_kb": list(sizes_kb), "source": "wire.push spans", **curve}
+
+
+def run_trace() -> None:
+    tr = _bench_codec_trace()
+    for kb in tr["value_kb"]:
+        row = tr[f"{kb}kb"]
+        emit(f"codec/encode_int8_{kb}kb_us", row["int8"]["encode_us_p50"],
+             f"{row['encode_ratio_int8_vs_exact']:.1f}x exact encode, "
+             f"{row['bytes_ratio_int8_vs_exact'] * 100:.0f}% of exact bytes")
+        emit(f"codec/encode_exact_{kb}kb_us", row["exact"]["encode_us_p50"],
+             f"{row['exact']['bytes_per_push'] / 1e6:.2f}MB/push")
+    with open("BENCH_codec.json", "w") as fh:
+        json.dump(tr, fh, indent=2)
+    big = tr[f"{tr['value_kb'][-1]}kb"]
+    print(f"# codec curve written to BENCH_codec.json (from wire.push "
+          f"spans): at {tr['value_kb'][-1]}KB int8 encode costs "
+          f"{big['encode_ratio_int8_vs_exact']:.1f}x exact for "
+          f"{big['bytes_ratio_int8_vs_exact'] * 100:.0f}% of the bytes")
+
+
 def _bench_faults() -> dict:
     """Failure recovery and degraded-mode throughput (docs/fault_model.md):
     latency from a host kill to the lost call's settle (detect -> requeue
@@ -472,5 +547,7 @@ def main() -> None:
 if __name__ == "__main__":
     if "--faults" in sys.argv:
         run_faults()                               # just the failure rows
+    elif "--trace" in sys.argv:
+        run_trace()                                # span-derived codec curve
     else:
         main()

@@ -18,6 +18,8 @@ failure:
   * the ``repro.analysis`` entry points (faasmlint rules, sanitizer lock
     factories and hook installation) fail to resolve — a refactor silently
     orphaning the instrumentation                        -> exit 1
+  * the ``repro.telemetry`` plane fails to install/uninstall its hooks or
+    the disarmed compile-out (zero ring writes) breaks   -> exit 1
 
 Invoked standalone:  python scripts/check_jax_pin.py
 """
@@ -52,8 +54,8 @@ def check_analysis_entry_points() -> int:
         from repro.state import kv, local, wire
 
         assert {"stripe-access", "lock-blocking", "wire-construct",
-                "tier-copy", "fault-point", "suppress-justify"} \
-            <= set(RULES), RULES
+                "tier-copy", "fault-point", "metric-naming",
+                "suppress-justify"} <= set(RULES), RULES
         # the fault layer must be disarmed at import and resolve its public
         # surface (the chaos gate in tier1.sh depends on it)
         assert faults.active() is None
@@ -81,6 +83,61 @@ def check_analysis_entry_points() -> int:
               f"  scripts/faasmlint.py and the FAASM_SANITIZE hooks in "
               f"repro/state + repro/cancellation depend on these; fix "
               f"src/repro/analysis/ before trusting the tier-1 gate.")
+        return 1
+    return check_telemetry_entry_points()
+
+
+def check_telemetry_entry_points() -> int:
+    """The tracing plane must compile out when disarmed (one pointer
+    compare per hook site, zero ring writes) and install/uninstall into
+    every instrumented module — the bench_dispatch warm-p99 budget
+    depends on the disarmed fast path staying free."""
+    try:
+        from repro import faults, telemetry
+        from repro.analysis import sanitizer
+        from repro.core import runtime
+        from repro.state import kv, local
+        from repro.telemetry import metrics, spans
+
+        # disarmed: every hook slot is None — hook sites cost one compare
+        assert not telemetry.enabled()
+        for mod in (runtime, kv, local, faults):
+            assert mod._TEL is None, mod
+        # armed: one Tracer lands in every slot; disarm restores None
+        t = telemetry.enable()
+        try:
+            for mod in (runtime, kv, local, faults):
+                assert mod._TEL is t, mod
+            assert telemetry.tracer() is t
+        finally:
+            telemetry.disable()
+        for mod in (runtime, kv, local, faults):
+            assert mod._TEL is None, mod
+        # compile-out: building + exercising a fabric while disarmed must
+        # leave a fresh tracer's write counter untouched
+        probe = telemetry.spans.Tracer()
+        assert probe.writes == 0 and probe.drain() == []
+        # the sanitizer installs the drain guard into the spans module
+        st = sanitizer.enable()
+        try:
+            assert spans._SAN_GUARD is not None
+        finally:
+            sanitizer.disable()
+        assert spans._SAN_GUARD is None
+        # the registry enforces the naming convention at registration
+        try:
+            metrics.Registry().counter("not_a_faasm_metric")
+        except ValueError:
+            pass
+        else:
+            raise AssertionError("bad metric name accepted")
+        assert metrics.valid_name("faasm_tier_net_bytes")
+    except Exception as e:
+        print(f"check_jax_pin: FAIL — repro.telemetry entry points do not "
+              f"resolve: {e!r}\n"
+              f"  The span hooks in repro/core + repro/state and the "
+              f"metrics registry depend on these; fix src/repro/telemetry/ "
+              f"before trusting the tier-1 gate.")
         return 1
     return 0
 

@@ -44,6 +44,14 @@ the invariants in ``docs/invariants.md``:
     ad-hoc ``if FAULTS:`` branch that the disarmed one-compare fast path
     can't keep free, and that schedules can't see or count.
 
+``metric-naming``
+    Metrics are registered through a ``telemetry.metrics`` registry with
+    names matching ``faasm_<subsystem>_<name>_<unit>`` (string-literal
+    names on ``.counter``/``.gauge``/``.histogram`` calls are checked
+    against the convention), and the data-plane modules take timestamps
+    from ``repro.telemetry.clock`` — a direct ``time.perf_counter()``
+    there is a second clock the spans can't be correlated with.
+
 ``suppress-justify``
     Every ``# faasmlint: disable=<rule>`` must carry a justification
     string (and name a real rule).
@@ -75,6 +83,9 @@ RULES: Dict[str, str] = {
                     "repro.faults surface (faults.point/arm/disarm) — "
                     "internals like _PLAN are off-limits outside "
                     "repro/faults.py"),
+    "metric-naming": ("metric name violating faasm_<subsystem>_<name>_"
+                      "<unit>, or a direct time.perf_counter() in a "
+                      "data-plane module (use repro.telemetry.clock)"),
     "suppress-justify": ("faasmlint suppression without a justification "
                          "(or naming an unknown rule)"),
 }
@@ -110,7 +121,25 @@ FAULTS_HOME = "repro/faults.py"      # the one module allowed its internals
 FAULTS_PUBLIC = frozenset({
     "point", "arm", "disarm", "armed", "active",
     "FaultPlan", "FaultRule", "FaultInjected", "HostCrash", "FAULT_POINTS",
+    "_TEL",      # telemetry hook slot: written by repro.telemetry.spans
 })
+
+# data-plane modules: every timestamp comes from repro.telemetry.clock so
+# spans, Call timing and benchmark rows share one monotonic timebase
+DATA_PLANE_FILES = (
+    "core/runtime.py", "core/faaslet.py", "core/proto.py",
+    "core/host_interface.py", "state/kv.py", "state/local.py",
+    "state/wire.py", "launch/serve.py", "launch/train.py",
+)
+CLOCK_HOME = "telemetry/clock.py"    # the one module allowed perf_counter
+_RAW_CLOCK_CALLS = frozenset({"perf_counter", "perf_counter_ns"})
+# mirror of repro.telemetry.metrics._NAME_RE (this linter is AST-only and
+# must not import the checked code); keep the unit list in sync
+_METRIC_UNITS = ("seconds", "ms", "us", "ns", "bytes", "pages", "total",
+                 "count", "ratio", "rps")
+_METRIC_NAME_RE = re.compile(
+    r"^faasm(_[a-z0-9]+)+_(" + "|".join(_METRIC_UNITS) + r")$")
+_REGISTRY_METHODS = frozenset({"counter", "gauge", "histogram"})
 
 _DISABLE_RE = re.compile(
     r"#\s*faasmlint:\s*disable=([A-Za-z0-9_,-]+)[ \t]*(.*)")
@@ -377,6 +406,26 @@ class _FunctionLinter:
                 "wire-construct", n.lineno,
                 "WireFrame constructed outside repro/state/wire.py — go "
                 "through a WireCodec (or wire.frame_from_quantized)")
+        if name in _RAW_CLOCK_CALLS and self.checker.data_plane_scope:
+            self.checker.add(
+                "metric-naming", n.lineno,
+                f"direct time.{name}() in a data-plane module — take "
+                f"timestamps from repro.telemetry.clock so spans and "
+                f"Call timing share one timebase")
+        if name in _REGISTRY_METHODS and isinstance(n.func, ast.Attribute) \
+                and n.args and isinstance(n.args[0], ast.Constant) \
+                and isinstance(n.args[0].value, str):
+            try:
+                recv = ast.unparse(n.func.value).lower()
+            except Exception:                  # pragma: no cover
+                recv = "registry"              # can't tell: err on checking
+            if any(h in recv for h in ("metric", "reg")) and \
+                    not _METRIC_NAME_RE.match(n.args[0].value):
+                self.checker.add(
+                    "metric-naming", n.lineno,
+                    f"metric name {n.args[0].value!r} violates "
+                    f"faasm_<subsystem>_<name>_<unit> "
+                    f"(unit one of {', '.join(_METRIC_UNITS)})")
         if self.checker.tier_copy_scope and not self.accounted:
             is_np_copy = (name == "copy" and isinstance(n.func, ast.Attribute)
                           and isinstance(n.func.value, ast.Name)
@@ -397,6 +446,9 @@ class _FileLinter:
         self.suppressions = _parse_suppressions(source, path, self.violations)
         self.tier_copy_scope = any(self.path_str.endswith(p)
                                    for p in TIER_COPY_FILES)
+        self.data_plane_scope = (
+            any(self.path_str.endswith(p) for p in DATA_PLANE_FILES)
+            and not self.path_str.endswith(CLOCK_HOME))
 
     def add(self, rule: str, line: int, message: str) -> None:
         if rule in self.suppressions.get(line, ()):

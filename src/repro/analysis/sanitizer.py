@@ -77,8 +77,8 @@ class Report:
 
     check: str                   # lock-order | stripe-ownership | torn-read |
     #                              wire-version | wire-window | wire-residual |
-    #                              cancel-under-lock | lock-misuse |
-    #                              attempt-fence
+    #                              cancel-under-lock | telemetry-under-lock |
+    #                              lock-misuse | attempt-fence
     message: str
     stack: str                   # where the violation was observed
     other_stack: Optional[str] = None   # lock-order: the reverse acquisition
@@ -377,6 +377,23 @@ class _State:
                 f"cancellation checkpoint reached while holding {names} — "
                 f"a cancel raising here would leak the lock")
 
+    # -- telemetry ---------------------------------------------------------
+
+    def telemetry_drain_guard(self) -> None:
+        """Span ring-buffer *writes* are lock-free and legal anywhere, but
+        the collector drain walks every thread's ring and the shared
+        collected list — stalling it under a stripe/key lock couples the
+        observability plane into the fabric's hot locks (and an export
+        callback touching state would deadlock).  Installed into
+        ``repro.telemetry.spans._SAN_GUARD``; ``Tracer.drain`` calls it."""
+        held = [e for e in self._held() if e.kind in _NO_CANCEL_KINDS]
+        if held:
+            names = ", ".join(f"{e.kind}:{e.name}" for e in held)
+            self.report(
+                "telemetry-under-lock",
+                f"telemetry collector drain reached while holding {names} — "
+                f"drain/export must run outside fabric locks")
+
 
 class SanLock:
     """Instrumented re-entrant mutex (drop-in for ``threading.RLock``)."""
@@ -467,10 +484,13 @@ def _install(st: Optional[_State]) -> None:
     here, not at module top level, to keep the factory import acyclic."""
     from repro import cancellation
     from repro.state import kv, local, wire
+    from repro.telemetry import spans
     kv._SAN = st
     local._SAN = st
     wire._SAN = st
     cancellation._SAN_GUARD = st.checkpoint_guard if st is not None else None
+    spans._SAN_GUARD = (st.telemetry_drain_guard
+                        if st is not None else None)
 
 
 def enable() -> _State:

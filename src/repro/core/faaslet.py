@@ -28,7 +28,6 @@ import itertools
 import mmap
 import os
 import threading
-import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
@@ -36,6 +35,7 @@ import numpy as np
 
 from repro import faults
 from repro.analysis.sanitizer import make_mutex
+from repro.telemetry import clock as tclock
 
 WASM_PAGE = 65536
 FAASLET_OVERHEAD_BYTES = 200 * 1024       # paper Tab. 3: ~200 kB per Faaslet
@@ -169,7 +169,7 @@ class Faaslet:
         self._region_top = memory_limit            # shared regions map above it
         self.usage = ResourceUsage(cpu_budget_ns=cpu_budget_ns,
                                    net_budget=net_budget)
-        self.created_at = time.perf_counter()
+        self.created_at = tclock.now()
         self.calls_served = 0
         self.restored_from_proto = False
         self.reclaimed_pages = 0        # dirty pages handed back via madvise

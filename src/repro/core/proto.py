@@ -29,13 +29,13 @@ from __future__ import annotations
 
 import pickle
 import threading
-import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.core.faaslet import ArenaBase, Faaslet
+from repro.telemetry import clock as tclock
 
 _cache_lock = threading.Lock()
 _PICKLE_FIELDS = ("func_name", "arena", "brk", "memory_limit", "user_state")
@@ -147,9 +147,9 @@ class ExecutableCache:
             if key in self._cache:
                 self.hits += 1
                 return self._cache[key], True, 0.0
-        t0 = time.perf_counter()
+        t0 = tclock.now()
         built = build()
-        dt = time.perf_counter() - t0
+        dt = tclock.now() - t0
         with self._lock:
             self._cache.setdefault(key, built)
             self.misses += 1

@@ -41,8 +41,15 @@ from repro.core.scheduler import LocalScheduler
 from repro.core.vfs import VirtualFS
 from repro.state.kv import GlobalTier
 from repro.state.local import LocalTier
+from repro.telemetry import clock as tclock
+from repro.telemetry import metrics as tmetrics
 
 _call_ids = itertools.count(1)
+
+# Telemetry hook state, installed by repro.telemetry.enable(); every hook
+# site below is guarded by one pointer compare — zero ring writes disarmed
+# (asserted by scripts/check_jax_pin.py).
+_TEL = None
 
 
 @dataclass
@@ -93,7 +100,24 @@ class Call:
 
     @property
     def latency(self) -> float:
-        return (self.t_end or time.perf_counter()) - self.t_submit
+        return (self.t_end or tclock.now()) - self.t_submit
+
+    @property
+    def queue_wait(self) -> float:
+        """Submit → start of the winning attempt, on the telemetry clock
+        (all three stamps come from ``repro.telemetry.clock``, so the
+        difference is well-defined by construction)."""
+        if not self.t_start:
+            return 0.0
+        return max(self.t_start - self.t_submit, 0.0)
+
+    @property
+    def exec_wall(self) -> float:
+        """Start → settle of the current/last attempt (running calls
+        report elapsed-so-far)."""
+        if not self.t_start:
+            return 0.0
+        return (self.t_end or tclock.now()) - self.t_start
 
     @property
     def fence_id(self) -> str:
@@ -241,6 +265,9 @@ class Host:
             self.runtime._finish_call(call, rc=1, status="failed",
                                       error=f"host crash: {e!r}")
         finally:
+            tel = _TEL
+            if tel is not None:
+                tel.clear_ctx()                  # executor thread is reused
             with self._mutex:
                 self._inflight -= 1
 
@@ -251,7 +278,7 @@ class Host:
                 self.warm_hits += 1
                 return pool.pop(), False
         # cold start
-        t0 = time.perf_counter()
+        t0 = tclock.now()
         proto = self.runtime.proto_for(fdef.name, host=self.id)
         if proto is not None and self.isolation == "faaslet":
             f, user_state = proto.restore(self.id)
@@ -263,7 +290,7 @@ class Host:
             if fdef.init_fn is not None:          # container path re-inits
                 api = FaasmAPI(f, self, self.runtime, _InitCall())
                 self._user_state[f.id] = fdef.init_fn(api)
-        dt = time.perf_counter() - t0
+        dt = tclock.now() - t0
         with self._mutex:
             self.cold_starts += 1
             self.init_seconds.append(dt)
@@ -278,11 +305,25 @@ class Host:
         fdef = rt.functions[call.fn]
         call.host = self.id
         call.status = "running"
-        call.t_start = time.perf_counter()
+        call.t_start = tclock.now()
+        tel = _TEL
+        if tel is not None:
+            # trace context for everything this attempt does on this
+            # thread (wire frames, fault hits, kernel work): twins and
+            # retries share the primary's fence with distinct epochs, so
+            # their spans group as siblings of one logical call
+            tel.set_ctx(call=call.id, fence=call.fence_id,
+                        epoch=call.fence_epoch, host=self.id)
+            tel.record("call.queue", "call", call.t_submit, call.t_start,
+                       fn=call.fn, attempt=call.attempts)
         faaslet, cold = self._acquire_faaslet(fdef)
         call.cold_start = cold
+        if tel is not None:
+            # restore = proto arena bind (cold) or warm-pool pop (~0)
+            tel.record("call.restore", "call", call.t_start, tclock.now(),
+                       fn=call.fn, cold=cold)
         api = FaasmAPI(faaslet, self, rt, call)
-        t0 = time.perf_counter()
+        t0 = tclock.now()
         faults.point("slow-host", call=call.id, host=self.id)
         # arm the time-sliced cancel checkpoint: kernel dispatch wrappers
         # call it, so pure-compute loops between host-interface calls also
@@ -308,7 +349,10 @@ class Host:
             rc, status, error = 1, "failed", repr(e)
         finally:
             cancellation.clear()                 # executor thread is reused
-        t_end = time.perf_counter()
+        t_end = tclock.now()
+        if tel is not None:
+            tel.record("call.exec", "call", t0, t_end, fn=call.fn,
+                       status=status, rc=rc, cold=cold)
         dur = t_end - t0
         faaslet.usage.charge_cpu(int(dur * 1e9))
         faaslet.calls_served += 1
@@ -342,6 +386,7 @@ class Host:
         # calls — O(dirty pages) when the Faaslet carries a CoW base
         proto = rt.proto_for(call.fn, host=self.id, transfer=False)
         if proto is not None and self.isolation == "faaslet":
+            t0_reset = tclock.now()
             if faaslet.has_base():
                 reclaimed0 = faaslet.reclaimed_pages
                 retained0 = faaslet.retained_pages
@@ -371,6 +416,10 @@ class Host:
                 self.reset_pages += pages
                 self.reclaimed_pages += reclaimed
                 self.retained_pages += retained
+            if tel is not None:
+                tel.record("call.reset", "call", t0_reset, tclock.now(),
+                           pages=pages, reclaimed=reclaimed,
+                           retained=retained)
         with self._mutex:
             if self.alive:
                 self._warm[call.fn].append(faaslet)
@@ -466,6 +515,12 @@ class FaasmRuntime:
         self.max_retries = max_retries
         self.backoff = backoff
         self.max_attempts = max_retries + 1
+        # one registry per runtime: hot paths keep their lock-local
+        # counters; this collector snapshots them into gauges at scrape
+        # time (metrics_text / cold_start_stats / benchmarks all read it)
+        self.metrics = tmetrics.Registry()
+        self._init_pub: Dict[str, int] = {}      # init_seconds scrape cursors
+        self.metrics.register_collector(self._publish_metrics)
         for i in range(n_hosts):
             self.add_host(capacity=capacity)
         # Background monitor: straggler speculation + heartbeat failure
@@ -570,7 +625,7 @@ class FaasmRuntime:
         with self._mutex:
             for inp in inputs:
                 call = Call(id=next(_call_ids), fn=fn, input=bytes(inp),
-                            parent=pid, t_submit=time.perf_counter())
+                            parent=pid, t_submit=tclock.now())
                 self._calls[call.id] = call
                 self._active.add(call.id)
                 calls.append(call)
@@ -733,9 +788,16 @@ class FaasmRuntime:
             c.status = status
             if error:
                 c.error = error
-            c.t_end = t_end if t_end is not None else time.perf_counter()
+            c.t_end = t_end if t_end is not None else tclock.now()
 
         first = call._settle(mutate)
+        tel = _TEL
+        if tel is not None and first:
+            tel.instant("call.settle", "call", call=call.id,
+                        fence=call.fence_id, epoch=call.fence_epoch,
+                        host=call.host, status=call.status,
+                        queue_wait=call.queue_wait,
+                        exec_wall=call.exec_wall)
         with self._mutex:
             self._active.discard(call.id)
         # exactly-once: the winning settle seals the call's fence, so any
@@ -808,7 +870,7 @@ class FaasmRuntime:
         if not others:
             return False
         twin = Call(id=next(_call_ids), fn=call.fn, input=call.input,
-                    parent=call.parent, t_submit=time.perf_counter())
+                    parent=call.parent, t_submit=tclock.now())
         twin.attempts = call.attempts
         twin.primary_id = call.id
         # the twin writes state under the primary's fence with its own
@@ -885,7 +947,7 @@ class FaasmRuntime:
         # straggler speculation: duplicate long-running calls (twins adopt
         # their result into the primary on completion)
         if self.straggler_timeout:
-            now = time.perf_counter()
+            now = tclock.now()
             for c in active:
                 if (c.twin_id is None and c.primary_id is None
                         and c.status == "running" and not c.event.is_set()
@@ -912,19 +974,106 @@ class FaasmRuntime:
     def transfer_bytes(self) -> int:
         return self.global_tier.total_transfer()
 
+    def _publish_metrics(self, reg: tmetrics.Registry) -> None:
+        """Scrape-time collector: snapshot the fabric's lock-local counters
+        into registry gauges.  Runs on every ``collect()`` (metrics_text,
+        snapshot, cold_start_stats, the serve /metrics endpoint) — never on
+        a hot path."""
+        hosts = list(self.hosts.values())
+        g = reg.gauge
+
+        def _sum(attr):
+            return sum(getattr(h, attr) for h in hosts)
+
+        g("faasm_host_cold_starts_total",
+          "proto-Faaslet restores from scratch").set(_sum("cold_starts"))
+        g("faasm_host_warm_hits_total",
+          "calls served from the warm pool").set(_sum("warm_hits"))
+        g("faasm_host_resets_total",
+          "§5.2 post-call dirty resets").set(_sum("resets"))
+        g("faasm_host_reset_pages",
+          "dirty pages re-stamped across resets").set(_sum("reset_pages"))
+        g("faasm_host_reclaimed_pages",
+          "dirty pages madvised back (CoW)").set(_sum("reclaimed_pages"))
+        g("faasm_host_retained_pages",
+          "dirty pages re-stamped, kept resident").set(_sum("retained_pages"))
+        g("faasm_host_cancelled_execs_total",
+          "speculative losers stopped early").set(_sum("cancelled_execs"))
+        g("faasm_runtime_calls_done_total").set(_sum("calls_done"))
+        g("faasm_host_billable_byte_seconds",
+          "§6.1 billable memory integral").set(_sum("billable_byte_seconds"))
+        with self._mutex:
+            occupancy = sum(
+                sum(len(fl) for fl in h._warm.values()) for h in hosts)
+        g("faasm_host_warm_pool_count",
+          "Faaslets resident in warm pools").set(occupancy)
+        # init times: feed only the not-yet-scraped tail of each host's
+        # init_seconds into the histogram (collectors run repeatedly)
+        hist = reg.histogram("faasm_host_init_ms",
+                             "proto restore + module init wall time")
+        for h in hosts:
+            seen = self._init_pub.get(h.id, 0)
+            tail = h.init_seconds[seen:]
+            self._init_pub[h.id] = seen + len(tail)
+            for s in tail:
+                hist.observe(1e3 * s)
+
+        gt = self.global_tier
+        g("faasm_tier_net_bytes",
+          "wire bytes moved through the global tier").set(gt.total_transfer())
+        g("faasm_tier_copied_bytes",
+          "bytes served host-local (zero-copy path)").set(gt.total_copied())
+        g("faasm_tier_broadcast_bytes",
+          "wire bytes fanned out to subscribers").set(gt.total_broadcast())
+        g("faasm_tier_fence_rejections_total",
+          "pushes refused by the attempt fence").set(gt.fence_rejections)
+
+        tiers = [h.local_tier for h in hosts]
+        for h in hosts:
+            with h._mutex:
+                tiers.extend(h._container_tiers.values())
+        g("faasm_wire_codec_fallbacks_total",
+          "int8 encodes rescued by the exact wire").set(
+              sum(t.codec_fallbacks for t in tiers))
+        g("faasm_wire_policy_flips_total",
+          "damped WirePolicy wire switches").set(
+              sum(t.policy_flips() for t in tiers))
+
+        plan = faults.active()
+        if plan is not None:
+            g("faasm_faults_hits_total",
+              "fault rules triggered by the armed plan").set(plan.fired())
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of this runtime's registry (scrapes
+        the collector first) — same body the serve ``--metrics-port``
+        endpoint returns."""
+        return self.metrics.render_text()
+
     def cold_start_stats(self) -> dict:
-        inits = [s for h in self.hosts.values() for s in h.init_seconds]
+        """Cold-start/reset statistics, read through the metrics registry
+        (one source of truth with metrics_text and the benchmarks).
+        Counts are exact; init_p99_ms is the registry histogram's
+        log-bucketed percentile (≤ ~2.2 % relative error)."""
+        self.metrics.collect()
+        m = self.metrics.get
+
+        def _g(name):
+            inst = m(name)
+            return int(inst.value) if inst is not None else 0
+
+        hist = m("faasm_host_init_ms")
         return {
-            "cold_starts": sum(h.cold_starts for h in self.hosts.values()),
-            "warm_hits": sum(h.warm_hits for h in self.hosts.values()),
-            "init_mean_ms": 1e3 * float(np.mean(inits)) if inits else 0.0,
-            "init_p99_ms": 1e3 * float(np.percentile(inits, 99)) if inits else 0.0,
-            "resets": sum(h.resets for h in self.hosts.values()),
-            "reset_pages": sum(h.reset_pages for h in self.hosts.values()),
-            "reclaimed_pages": sum(h.reclaimed_pages
-                                   for h in self.hosts.values()),
-            "retained_pages": sum(h.retained_pages
-                                  for h in self.hosts.values()),
+            "cold_starts": _g("faasm_host_cold_starts_total"),
+            "warm_hits": _g("faasm_host_warm_hits_total"),
+            "init_mean_ms": (hist.sum / hist.count
+                             if hist is not None and hist.count else 0.0),
+            "init_p99_ms": (hist.percentile(0.99)
+                            if hist is not None and hist.count else 0.0),
+            "resets": _g("faasm_host_resets_total"),
+            "reset_pages": _g("faasm_host_reset_pages"),
+            "reclaimed_pages": _g("faasm_host_reclaimed_pages"),
+            "retained_pages": _g("faasm_host_retained_pages"),
         }
 
     def shutdown(self) -> None:

@@ -165,6 +165,10 @@ class FaultPlan:
                     else:
                         action = "raise"
                     break
+        tel = _TEL
+        if tel is not None and action is not None:
+            tel.instant(f"fault.{name}", "fault", point=name, action=action,
+                        key=key, target_host=host)
         if action == "delay":
             time.sleep(delay)
             return False
@@ -183,6 +187,11 @@ class FaultPlan:
 # module globals.  Nothing outside this module may read it (lint rule
 # `fault-point`); sites call point() unconditionally.
 _PLAN: Optional[FaultPlan] = None
+
+# Armed tracer (set by repro.telemetry.spans._install): every *triggered*
+# fault rule drops a `fault.<point>` instant span so chaos traces show
+# where the schedule bit.  Ring write only — safe under any lock.
+_TEL = None
 
 
 def point(name: str, call: Optional[str] = None, key: Optional[str] = None,

@@ -11,7 +11,6 @@ completion latch) and reports p50/p99 dispatch latency and batch throughput.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +22,9 @@ from repro.distributed.sharding import ShardingRules
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import make_prefill_step, make_serve_step
 from repro.models import ExecConfig, build_model
+from repro.telemetry import clock as tclock
+from repro.telemetry import metrics as tmetrics
+from repro.telemetry import spans as tspans
 
 
 def make_infer_function(model, treedef, host_leaves, prompt_len: int = 16,
@@ -153,18 +155,27 @@ def run_faasm_fanout(model, params, vocab_size: int, n_requests: int,
         rt.wait_all(rt.invoke_many("infer", payloads[:capacity],
                                    state_hint=hint), timeout=300)
         rt.global_tier.reset_metrics()
-        t0 = time.perf_counter()
+        t0 = tclock.now()
         wave = submit_degradable(rt, "infer", payloads,
                                  min_alive_hosts=min_alive_hosts,
                                  state_hint=hint, timeout=600)
-        wall = time.perf_counter() - t0
+        wall = tclock.now() - t0
         served = [c for c in wave["call_ids"] if c is not None]
         assert all(r in (0, SHED_RC) for r in wave["codes"]), wave["codes"]
-        lat_ms = np.asarray([rt.call(c).latency for c in served]) * 1e3
+        # one source of truth: per-request latency lands in the runtime's
+        # registry (mirrored to the process registry for --metrics-port)
+        hist = rt.metrics.histogram("faasm_serve_request_ms",
+                                    "end-to-end request latency")
+        mirror = tmetrics.registry().histogram("faasm_serve_request_ms",
+                                               "end-to-end request latency")
+        for c in served:
+            ms = rt.call(c).latency * 1e3
+            hist.observe(ms)
+            mirror.observe(ms)
         out = {"requests": n_requests, "wall_s": wall,
                "throughput_rps": len(served) / wall,
-               "p50_ms": float(np.percentile(lat_ms, 50)) if served else 0.0,
-               "p99_ms": float(np.percentile(lat_ms, 99)) if served else 0.0,
+               "p50_ms": hist.percentile(0.50) if served else 0.0,
+               "p99_ms": hist.percentile(0.99) if served else 0.0,
                "degraded": wave["degraded"], "shed": wave["shed"]}
         if state_wire is not None:
             out["state_wire"] = state_wire
@@ -195,7 +206,15 @@ def main():
                     help="track shared serving stats through the state tier "
                          "and move deltas with this wire format (auto = "
                          "per-key adaptive WirePolicy)")
+    ap.add_argument("--metrics-port", type=int, default=0,
+                    help="expose the telemetry registry as Prometheus text "
+                         "on this port (0 = off)")
     args = ap.parse_args()
+
+    reg = tmetrics.registry()
+    if args.metrics_port:
+        tmetrics.serve_http(reg, args.metrics_port)
+        print(f"metrics: http://127.0.0.1:{args.metrics_port}/metrics")
 
     if args.smoke:
         cfg = smoke_config(args.arch)
@@ -224,23 +243,36 @@ def main():
     decode = jax.jit(model.decode_step)
 
     cache = model.init_cache(B, max_len)
-    t0 = time.perf_counter()
+    tel = tspans.tracer()
+    t0 = tclock.now()
     logits, cache, n = prefill(params, tokens, cache, extra)
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    prefill_s = time.perf_counter() - t0
+    t1 = tclock.now()
+    reg.histogram("faasm_serve_prefill_ms").observe((t1 - t0) * 1e3)
+    if tel is not None:
+        tel.record("serve.prefill", "serve", t0, t1, arch=cfg.name, tokens=S)
     n_total = int(n) if not hasattr(n, "shape") else S + (
         cfg.n_image_tokens if cfg.family == "vlm" else 0)
 
     out = [tok]
-    t0 = time.perf_counter()
+    t0 = tclock.now()
     for i in range(args.new_tokens - 1):
         idx = jnp.full((B,), n_total + i, jnp.int32)
         logits, cache = decode(params, tok, cache, idx)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
         out.append(tok)
     jax.block_until_ready(tok)
-    decode_s = time.perf_counter() - t0
+    t1 = tclock.now()
+    reg.histogram("faasm_serve_decode_ms").observe((t1 - t0) * 1e3)
+    if tel is not None:
+        tel.record("serve.decode", "serve", t0, t1, arch=cfg.name,
+                   steps=args.new_tokens - 1)
     gen = np.stack([np.asarray(t) for t in out], axis=1)
+    # the printed line reads the registry — the timers above are its only
+    # writers, so the log and /metrics can never disagree
+    snap = reg.snapshot()
+    prefill_s = snap["faasm_serve_prefill_ms_sum"] / 1e3
+    decode_s = snap["faasm_serve_decode_ms_sum"] / 1e3
     print(f"{cfg.name}: prefill {S} toks in {prefill_s * 1e3:.1f}ms; "
           f"{args.new_tokens - 1} decode steps in {decode_s * 1e3:.1f}ms "
           f"({(args.new_tokens - 1) * B / max(decode_s, 1e-9):.1f} tok/s)")

@@ -7,7 +7,6 @@ on this CPU container use ``--smoke`` for a reduced config on one device).
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +21,9 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import make_train_step
 from repro.models import ExecConfig, build_model
 from repro.optim import SGD, AdamW, warmup_cosine
+from repro.telemetry import clock as tclock
+from repro.telemetry import metrics as tmetrics
+from repro.telemetry import spans as tspans
 
 
 def main():
@@ -80,15 +82,24 @@ def main():
         print(f"resumed at step {start}")
 
     pc = PipelineConfig(seed=0)
-    t0 = time.perf_counter()
+    # step timing flows through the telemetry registry; the printed log
+    # reads the histogram back, so it and any scrape agree by construction
+    hist = tmetrics.registry().histogram("faasm_train_step_ms")
+    tel = tspans.tracer()
     for step in range(start, args.steps):
+        s0 = tclock.now()
         batch = {k: jnp.asarray(v)
                  for k, v in make_batch(cfg, shape, pc, step).items()}
         params, state, metrics = step_fn(params, state, batch)
+        s1 = tclock.now()
+        hist.observe((s1 - s0) * 1e3)
+        if tel is not None:
+            tel.record("train.step", "train", s0, s1, step=step)
         if step % 10 == 0 or step == args.steps - 1:
             print(f"step {step:5d} loss {float(metrics['loss']):8.4f} "
                   f"gnorm {float(metrics.get('grad_norm', 0.0)):8.3f} "
-                  f"({(time.perf_counter() - t0):6.1f}s)")
+                  f"({hist.sum / 1e3:6.1f}s, "
+                  f"p50 {hist.percentile(0.5):5.0f}ms)")
         if args.ckpt_every and step and step % args.ckpt_every == 0:
             ck.save(step, (params, state))
     ck.save(args.steps, (params, state), blocking=True)

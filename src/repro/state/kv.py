@@ -55,6 +55,9 @@ from repro.state.wire import WireFrame, frame_from_quantized, get_codec
 # repro.analysis.sanitizer installs its hook state here (enable()); None
 # compiles every check in this module down to one pointer compare
 _SAN = None
+# repro.telemetry installs its tracer here (enable()); same discipline —
+# disarmed is one pointer compare per wire event, zero ring writes
+_TEL = None
 
 DEFAULT_CHUNK = 1 << 20          # 1 MiB state chunks
 DEFAULT_STRIPES = 64
@@ -236,6 +239,7 @@ class GlobalTier:
         self._fence_mu = make_mutex("fence")
         self._fences: Dict[str, _Fence] = {}
         self._fence_sealed: deque = deque()    # FIFO of sealed ids to prune
+        self.fence_rejections = 0              # pushes refused by the fence
 
     def _stripe(self, key: str) -> _Stripe:
         return self._stripes[zlib.crc32(key.encode()) % self.n_stripes]
@@ -262,6 +266,12 @@ class GlobalTier:
                             or seq <= f.hw.get(key, 0))
             if admitted:
                 f.hw[key] = seq
+            else:
+                self.fence_rejections += 1
+        tel = _TEL
+        if tel is not None and not admitted:
+            tel.instant("fence.reject", "wire", key=key, fence=call_id,
+                        epoch=epoch, seq=seq)
         if _SAN is not None:
             _SAN.fence_write(call_id, epoch, key, seq, admitted)
         return admitted
@@ -657,6 +667,8 @@ class GlobalTier:
         # immutable once stamped, and both the per-frame dequantise and the
         # int8 re-encode (a fused-kernel dispatch) are full-value work that
         # must not serialise unrelated keys in the stripe behind it
+        tel = _TEL
+        t0 = tel.now() if tel is not None else 0.0
         numel = max(f.numel for f in served)
         delta = np.zeros(numel, np.float32)
         for f in served:
@@ -664,7 +676,9 @@ class GlobalTier:
             delta[:d.size] += d
         if residual is not None and residual.size == delta.size:
             delta = delta + residual
+        enc0 = tel.now_ns() if tel is not None else 0
         frame = get_codec(wire).encode_delta(delta, backend=backend)
+        enc_ns = tel.now_ns() - enc0 if tel is not None else 0
         new_residual = None
         if frame.wire != "exact":
             new_residual = delta - frame.decode()
@@ -674,6 +688,12 @@ class GlobalTier:
         with s.lock:
             s.pulled[host] = s.pulled.get(host, 0) + frame.nbytes
             s.copied += frame.nbytes
+        if tel is not None:
+            tel.record("wire.pull", "wire", t0, tel.now(), key=key,
+                       wire=frame.wire, nbytes=frame.nbytes,
+                       numel=frame.numel, encode_ns=enc_ns,
+                       prev_version=base_version, version=cur,
+                       frames=len(served), puller=host)
         return frame, cur, new_residual
 
     def register_puller(self, key: str, origin: str) -> None:

@@ -68,6 +68,11 @@ class CodecFallback(Exception):
 # repro.analysis.sanitizer installs its hook state here (enable()); None
 # compiles every check in this module down to one pointer compare
 _SAN = None
+# repro.telemetry installs its tracer here (enable()); same discipline —
+# disarmed is one pointer compare per wire event, zero ring writes.  Ring
+# writes are lock-safe (single-writer per thread), so spans may be
+# recorded under replica/key locks; only collector drains may not.
+_TEL = None
 
 
 def _mean_abs(x) -> float:
@@ -311,6 +316,12 @@ class LocalTier:
                 p = self._policies[key] = WirePolicy()
             return p
 
+    def policy_flips(self) -> int:
+        """Total damped wire switches across this tier's per-key policies
+        (telemetry: published as ``faasm_wire_policy_flips_total``)."""
+        with self._mutex:
+            return sum(p.flips for p in self._policies.values())
+
     def subscribe(self, key: str) -> int:
         """Subscribe this tier's replica to the key's push fan-out: every
         wire frame another host applies to the global value is delivered and
@@ -353,13 +364,21 @@ class LocalTier:
             r = self._replicas.get(key)
         if r is None:
             raise KeyError(f"replica {key!r} evicted")
+        tel = _TEL
+        t0 = tel.now() if tel is not None else 0.0
+        applied = False
         r.lock.acquire_write()
         try:
-            if frame.prev_version != r.global_version:
-                return
-            self._apply_frame_locked(r, frame)
+            if frame.prev_version == r.global_version:
+                self._apply_frame_locked(r, frame)
+                applied = True
         finally:
             r.lock.release_write()
+        if tel is not None:
+            tel.record("wire.bcast", "wire", t0, tel.now(), key=key,
+                       wire=frame.wire, nbytes=frame.nbytes, applied=applied,
+                       prev_version=frame.prev_version, version=frame.version,
+                       subscriber=self.origin_id)
 
     def _apply_frame_locked(self, r: Replica, frame: WireFrame, *,
                             backend: Optional[str] = None,
@@ -450,6 +469,8 @@ class LocalTier:
         next ``push_delta`` would re-push every peer write since the old
         snapshot.  The cold path keeps the legacy leave-the-base semantics
         (callers re-arm with ``track_delta``/``snapshot_base``)."""
+        tel = _TEL
+        t0 = tel.now() if tel is not None else 0.0
         moved = 0
         if size:
             moved, ver = self.global_tier.readinto(
@@ -457,6 +478,9 @@ class LocalTier:
                 return_version=True)
         else:
             ver = self.global_tier.version(key)
+        if tel is not None and moved:
+            tel.record("wire.full_pull", "wire", t0, tel.now(), key=key,
+                       nbytes=moved, version=ver, puller=self.origin_id)
         # a warm full replica is a future delta-puller: declare interest so
         # pushers start feeding the key's retained window
         self.global_tier.register_puller(key, self.origin_id)
@@ -737,6 +761,8 @@ class LocalTier:
         full-pulls once and declares interest, flipping later pushes onto
         the frame path."""
         gt = self.global_tier
+        tel = _TEL
+        t0 = tel.now() if tel is not None else 0.0
         r.lock.acquire_write()
         try:
             local = r.buf.view(dt)
@@ -752,6 +778,10 @@ class LocalTier:
                 lock.release_write()
             if res is None:              # fenced out: superseded/duplicate
                 self._resync_locked(key, r)
+                if tel is not None:
+                    tel.record("wire.push", "wire", t0, tel.now(), key=key,
+                               wire="inplace", nbytes=0, fenced=True,
+                               origin=self.origin_id)
                 return 0
             moved, prev, new = res
             self._refresh_base(r)
@@ -761,6 +791,11 @@ class LocalTier:
             # pulls stay 0-byte no-ops instead of full re-pulls
             if r.global_version == prev:
                 r.global_version = new
+            if tel is not None:
+                tel.record("wire.push", "wire", t0, tel.now(), key=key,
+                           wire="inplace", nbytes=moved, encode_ns=0,
+                           prev_version=prev, version=new,
+                           origin=self.origin_id)
             return moved
         finally:
             r.lock.release_write()
@@ -782,6 +817,9 @@ class LocalTier:
         wire payload itself."""
         gt = self.global_tier
         codec = get_codec("exact")
+        tel = _TEL
+        t0 = tel.now() if tel is not None else 0.0
+        enc0 = tel.now_ns() if tel is not None else 0
         r.lock.acquire_write()
         try:
             d = r.device
@@ -814,6 +852,7 @@ class LocalTier:
                 r.dirty_chunks.clear()
         finally:
             r.lock.release_write()
+        enc_ns = (tel.now_ns() - enc0) if tel is not None else 0
         lock = gt.lock(key)
         lock.acquire_write()
         try:
@@ -827,8 +866,18 @@ class LocalTier:
                 self._resync_locked(key, r)
             finally:
                 r.lock.release_write()
+            if tel is not None:
+                tel.record("wire.push", "wire", t0, tel.now(), key=key,
+                           wire=frame.wire, nbytes=0, fenced=True,
+                           encode_ns=enc_ns, origin=self.origin_id)
             return 0
         self._after_push(key, r, frame)
+        if tel is not None:
+            tel.record("wire.push", "wire", t0, tel.now(), key=key,
+                       wire=frame.wire, nbytes=frame.nbytes,
+                       numel=frame.numel, encode_ns=enc_ns,
+                       prev_version=frame.prev_version,
+                       version=frame.version, origin=self.origin_id)
         if auto:
             # adaptive feedback only when the policy made the choice: forced
             # pushes skip the two extra full-array metric passes
@@ -851,6 +900,9 @@ class LocalTier:
         kernel directly."""
         gt = self.global_tier
         codec = get_codec("int8")
+        tel = _TEL
+        t0 = tel.now() if tel is not None else 0.0
+        enc0 = tel.now_ns() if tel is not None else 0
         r.lock.acquire_write()
         try:
             d = r.device
@@ -906,6 +958,7 @@ class LocalTier:
                 r.dirty_chunks.clear()
         finally:
             r.lock.release_write()
+        enc_ns = (tel.now_ns() - enc0) if tel is not None else 0
         lock = gt.lock(key)
         lock.acquire_write()
         try:
@@ -919,8 +972,18 @@ class LocalTier:
                 self._resync_locked(key, r)
             finally:
                 r.lock.release_write()
+            if tel is not None:
+                tel.record("wire.push", "wire", t0, tel.now(), key=key,
+                           wire=frame.wire, nbytes=0, fenced=True,
+                           encode_ns=enc_ns, origin=self.origin_id)
             return 0
         self._after_push(key, r, frame)
+        if tel is not None:
+            tel.record("wire.push", "wire", t0, tel.now(), key=key,
+                       wire=frame.wire, nbytes=frame.nbytes,
+                       numel=frame.numel, encode_ns=enc_ns,
+                       prev_version=frame.prev_version,
+                       version=frame.version, origin=self.origin_id)
         if auto:
             # adaptive feedback (policy-chosen pushes only): what the
             # quantisation dropped vs what it carried.  Carried mass is

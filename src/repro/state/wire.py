@@ -215,6 +215,7 @@ class WirePolicy:
         self._wire = "int8"
         self._streak = 0
         self._exact_obs = 0              # dense exact pushes since last probe
+        self.flips = 0                   # damped wire switches (telemetry)
 
     @property
     def wire(self) -> str:
@@ -259,3 +260,4 @@ class WirePolicy:
             self._wire = want
             self._streak = 0
             self._exact_obs = 0
+            self.flips += 1

@@ -1,0 +1,21 @@
+"""Telemetry plane: spans, metrics, exports — zero overhead when off.
+
+Three parts, one discipline (see ``docs/observability.md``):
+
+* :mod:`repro.telemetry.clock` — the single monotonic clock every
+  data-plane timestamp comes from.
+* :mod:`repro.telemetry.spans` — per-call span tracing into per-thread
+  ring buffers; armed via :func:`enable` (one pointer compare per hook
+  site when disarmed, compile-out asserted by ``scripts/check_jax_pin``).
+* :mod:`repro.telemetry.metrics` — the named counter/gauge/histogram
+  registry that the scattered hot-path counters publish into.
+* :mod:`repro.telemetry.trace` — Chrome/Perfetto ``trace_event`` export.
+"""
+from repro.telemetry import clock, metrics, spans, trace      # noqa: F401
+from repro.telemetry.spans import (Tracer, disable, enable,   # noqa: F401
+                                   enabled, tracer)
+
+__all__ = [
+    "Tracer", "clock", "disable", "enable", "enabled", "metrics",
+    "spans", "trace", "tracer",
+]

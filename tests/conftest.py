@@ -38,6 +38,15 @@ def _faults_disarmed():
 
 
 @pytest.fixture(autouse=True)
+def _telemetry_disarmed():
+    """Safety net: tracing armed by one test never leaks into the next
+    (a leaked tracer keeps every hook site writing span rings)."""
+    from repro import telemetry
+    yield
+    telemetry.disable()
+
+
+@pytest.fixture(autouse=True)
 def _faasm_sanitize(request):
     """Per-test sanitizer lifecycle (see module docstring)."""
     marked = request.node.get_closest_marker("sanitize") is not None

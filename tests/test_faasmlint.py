@@ -191,6 +191,54 @@ def test_fault_point_clean_idiom_and_home_exempt():
     assert lint_source(internal, "repro/faults.py") == []
 
 
+# -- metric-naming ----------------------------------------------------------
+
+def test_metric_naming_perf_counter_in_data_plane_seeded():
+    code = "import time\ndef f():\n    return time.perf_counter()\n"
+    vs = lint_source(code, "state/kv.py")
+    assert rules_of(vs) == {"metric-naming"}
+    assert vs[0].line == 3
+    # perf_counter_ns too
+    code_ns = "import time\nt = time.perf_counter_ns()\n"
+    assert rules_of(lint_source(code_ns, "core/runtime.py")) == \
+        {"metric-naming"}
+
+
+def test_metric_naming_perf_counter_out_of_scope_and_clock_home():
+    code = "import time\nt = time.perf_counter()\n"
+    assert lint_source(code, "analysis/bench.py") == []      # not data-plane
+    assert lint_source(code, "telemetry/clock.py") == []     # the one owner
+
+
+def test_metric_naming_bad_registry_name_seeded():
+    code = "def f(reg):\n    reg.counter('request_count')\n"
+    vs = lint_source(code, "m.py")
+    assert rules_of(vs) == {"metric-naming"}
+    bad_unit = "def f(reg):\n    reg.histogram('faasm_serve_latency')\n"
+    assert rules_of(lint_source(bad_unit, "m.py")) == {"metric-naming"}
+
+
+def test_metric_naming_clean_idiom():
+    code = (
+        "def f(reg, rt):\n"
+        "    reg.counter('faasm_test_events_total').inc()\n"
+        "    rt.metrics.histogram('faasm_serve_request_ms').observe(1.0)\n"
+        "    reg.gauge('faasm_tier_net_bytes').set(0)\n"
+    )
+    assert lint_source(code, "m.py") == []
+    # non-registry receivers named 'counter' are not metric registrations
+    other = "def f(db):\n    db.counter('rows')\n"
+    assert lint_source(other, "m.py") == []
+
+
+def test_metric_naming_suppressable():
+    code = ("import time\n"
+            "def f():\n"
+            "    return time.perf_counter()"
+            "  # faasmlint: disable=metric-naming -- wall-clock for a log\n")
+    assert lint_source(code, "state/kv.py") == []
+
+
 # -- suppressions -----------------------------------------------------------
 
 def test_suppression_without_justification_is_a_violation():
@@ -241,5 +289,6 @@ def test_cli_exits_zero_on_src():
 
 def test_every_rule_is_documented():
     assert set(RULES) == {"stripe-access", "lock-blocking", "wire-construct",
-                          "tier-copy", "fault-point", "suppress-justify"}
+                          "tier-copy", "fault-point", "metric-naming",
+                          "suppress-justify"}
     assert all(RULES.values())
