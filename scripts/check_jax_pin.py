@@ -20,6 +20,9 @@ failure:
     orphaning the instrumentation                        -> exit 1
   * the ``repro.telemetry`` plane fails to install/uninstall its hooks or
     the disarmed compile-out (zero ring writes) breaks   -> exit 1
+  * the ``repro.overload`` control plane (deadlines, retry budgets,
+    breakers) fails to resolve, or its disarmed hooks stop compiling out
+    to one pointer compare on a policy-less runtime      -> exit 1
 
 Invoked standalone:  python scripts/check_jax_pin.py
 """
@@ -55,13 +58,15 @@ def check_analysis_entry_points() -> int:
 
         assert {"stripe-access", "lock-blocking", "wire-construct",
                 "tier-copy", "fault-point", "metric-naming",
-                "suppress-justify"} <= set(RULES), RULES
+                "bounded-queue", "suppress-justify"} <= set(RULES), RULES
         # the fault layer must be disarmed at import and resolve its public
         # surface (the chaos gate in tier1.sh depends on it)
         assert faults.active() is None
         assert faults.point("wire-frame-drop") is False
         assert callable(faults.arm) and callable(faults.disarm)
-        assert len(faults.FAULT_POINTS) == 8, faults.FAULT_POINTS
+        assert len(faults.FAULT_POINTS) == 11, faults.FAULT_POINTS
+        assert {"queue-flood", "subscriber-stall",
+                "deadline-clock-skew"} <= set(faults.FAULT_POINTS)
         # a seeded violation must still be caught
         probe = ("from repro.state.wire import WireFrame\n"
                  "f = WireFrame(wire='exact', numel=0, payload=None)\n")
@@ -138,6 +143,68 @@ def check_telemetry_entry_points() -> int:
               f"  The span hooks in repro/core + repro/state and the "
               f"metrics registry depend on these; fix src/repro/telemetry/ "
               f"before trusting the tier-1 gate.")
+        return 1
+    return check_overload_entry_points()
+
+
+def check_overload_entry_points() -> int:
+    """The overload control plane must resolve its public surface and its
+    disarmed hooks must compile out to one pointer compare each — the
+    warm-path latency budget assumes a runtime built without an
+    OverloadPolicy pays nothing for deadlines/shedding/breakers."""
+    try:
+        from repro import overload
+        from repro.core.runtime import BatchTimeout, Call  # noqa: F401
+
+        # return codes are part of the wire contract (serve.py re-exports
+        # SHED_RC; scatter_gather keys retry decisions off DEADLINE_RC)
+        assert overload.SHED_RC == -2 and overload.DEADLINE_RC == -3
+        # deadline algebra: absolute expiry, positive-budget guard
+        dl = overload.Deadline.after(60.0)
+        assert not dl.expired() and 0.0 < dl.remaining() <= 60.0
+        try:
+            overload.Deadline.after(0.0)
+        except ValueError:
+            pass
+        else:
+            raise AssertionError("zero deadline budget accepted")
+        # retry budget: token bucket spends whole tokens, refills by ratio
+        rb = overload.RetryBudget(ratio=0.5, burst=2.0, initial=1.0)
+        assert rb.try_spend() and not rb.try_spend()
+        rb.on_success()
+        assert 0.0 < rb.fill_ratio() <= 1.0
+        # circuit breaker: failures trip it, allow() then refuses placement
+        br = overload.CircuitBreaker(window=4, failure_ratio=0.5,
+                                     min_volume=2, reset_timeout_s=60.0)
+        assert br.allow() and br.state == br.CLOSED
+        br.record(False)
+        br.record(False)
+        assert br.state == br.OPEN and not br.allow()
+        # bounded primitives: queues refuse growth past their depth
+        assert overload.bounded_queue(4).maxsize == 4
+        cq = overload.CoalescingQueue(depth=2)
+        assert cq.depth == 2
+        # disarmed compile-out: a policy-less runtime leaves every overload
+        # hook slot None and every fresh Call without a deadline, so the
+        # hot-path checks are single pointer compares
+        assert Call.__dataclass_fields__["deadline"].default is None
+        from repro.core.runtime import FaasmRuntime
+        rt = FaasmRuntime(n_hosts=1)
+        try:
+            assert rt.overload is None
+            assert rt._retry_budget is None and rt._breakers is None
+        finally:
+            rt.shutdown()
+        import inspect
+        sig = inspect.signature(overload.OverloadPolicy)
+        assert "max_queue_depth" in sig.parameters
+    except Exception as e:
+        print(f"check_jax_pin: FAIL — repro.overload entry points do not "
+              f"resolve: {e!r}\n"
+              f"  The admission/deadline/breaker hooks in repro/core/runtime "
+              f"and the serve.py --max-queue-depth/--default-deadline-ms "
+              f"flags depend on these; fix src/repro/overload.py before "
+              f"trusting the tier-1 gate.")
         return 1
     return 0
 

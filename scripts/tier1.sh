@@ -11,9 +11,11 @@ python scripts/check_jax_pin.py
 python scripts/faasmlint.py
 # Chaos smoke: the three fixed-seed fault-matrix storms under the
 # sanitizer's attempt-fence shadow (the wider seeded sweep is slow-marked;
-# see docs/fault_model.md), plus one traced chaos seed asserting the armed
+# see docs/fault_model.md), one traced chaos seed asserting the armed
 # telemetry plane exports a well-formed Perfetto trace under FAASM_SANITIZE
-# (docs/observability.md).
+# (docs/observability.md), and the overload-plane queue-flood smoke
+# (bounded admission refuses, the dispatcher spills, nothing sheds — see
+# docs/fault_model.md "Overload model").
 FAASM_SANITIZE=1 python -m pytest -x -q -p no:cacheprovider \
     tests/test_chaos.py tests/test_telemetry.py -k smoke
 exec python -m pytest -x -q -p no:cacheprovider -m "not slow" "$@"

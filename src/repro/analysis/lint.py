@@ -52,6 +52,14 @@ the invariants in ``docs/invariants.md``:
     from ``repro.telemetry.clock`` — a direct ``time.perf_counter()``
     there is a second clock the spans can't be correlated with.
 
+``bounded-queue``
+    In the data-plane packages (``core/``, ``state/``) every queue is
+    bounded: a raw ``queue.Queue()`` (or ``Queue()``) construction is a
+    violation — an unbounded queue is an invisible buffer that converts
+    overload into unbounded latency and memory instead of backpressure.
+    Use ``repro.overload.bounded_queue(...)`` (the blessed factory, with
+    the admission-control depth default) or ``overload.CoalescingQueue``.
+
 ``suppress-justify``
     Every ``# faasmlint: disable=<rule>`` must carry a justification
     string (and name a real rule).
@@ -86,6 +94,10 @@ RULES: Dict[str, str] = {
     "metric-naming": ("metric name violating faasm_<subsystem>_<name>_"
                       "<unit>, or a direct time.perf_counter() in a "
                       "data-plane module (use repro.telemetry.clock)"),
+    "bounded-queue": ("raw queue.Queue() in a data-plane package (core/, "
+                      "state/) — use repro.overload.bounded_queue() or "
+                      "CoalescingQueue so overload becomes backpressure, "
+                      "not an unbounded buffer"),
     "suppress-justify": ("faasmlint suppression without a justification "
                          "(or naming an unknown rule)"),
 }
@@ -131,6 +143,10 @@ DATA_PLANE_FILES = (
     "core/host_interface.py", "state/kv.py", "state/local.py",
     "state/wire.py", "launch/serve.py", "launch/train.py",
 )
+# packages where the bounded-queue rule applies: the data plane, where an
+# unbounded queue defeats admission control
+BOUNDED_QUEUE_DIRS = ("core/", "state/")
+_RAW_QUEUE_CALLS = frozenset({"Queue", "SimpleQueue", "LifoQueue"})
 CLOCK_HOME = "telemetry/clock.py"    # the one module allowed perf_counter
 _RAW_CLOCK_CALLS = frozenset({"perf_counter", "perf_counter_ns"})
 # mirror of repro.telemetry.metrics._NAME_RE (this linter is AST-only and
@@ -406,6 +422,12 @@ class _FunctionLinter:
                 "wire-construct", n.lineno,
                 "WireFrame constructed outside repro/state/wire.py — go "
                 "through a WireCodec (or wire.frame_from_quantized)")
+        if name in _RAW_QUEUE_CALLS and self.checker.bounded_queue_scope:
+            self.checker.add(
+                "bounded-queue", n.lineno,
+                f"raw {name}() in a data-plane package — use "
+                f"repro.overload.bounded_queue() (or CoalescingQueue) so "
+                f"overload turns into backpressure, not an unbounded buffer")
         if name in _RAW_CLOCK_CALLS and self.checker.data_plane_scope:
             self.checker.add(
                 "metric-naming", n.lineno,
@@ -446,6 +468,8 @@ class _FileLinter:
         self.suppressions = _parse_suppressions(source, path, self.violations)
         self.tier_copy_scope = any(self.path_str.endswith(p)
                                    for p in TIER_COPY_FILES)
+        self.bounded_queue_scope = any(d in self.path_str
+                                       for d in BOUNDED_QUEUE_DIRS)
         self.data_plane_scope = (
             any(self.path_str.endswith(p) for p in DATA_PLANE_FILES)
             and not self.path_str.endswith(CLOCK_HOME))

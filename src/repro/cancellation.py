@@ -38,7 +38,8 @@ _SAN_GUARD: Optional[Callable[[], None]] = None
 
 def install(check: Callable[[], None],
             slice_s: float = DEFAULT_SLICE_S,
-            beat: Optional[Callable[[], None]] = None) -> None:
+            beat: Optional[Callable[[], None]] = None,
+            budget: Optional[Callable[[], float]] = None) -> None:
     """Arm this thread's cancel checkpoint.  ``check`` raises (e.g.
     ``CallCancelled``) when the current call should stop.
 
@@ -46,10 +47,19 @@ def install(check: Callable[[], None],
     per elapsed slice *before* the cancel check: a pure-compute loop that
     only ever reaches these checkpoints would otherwise stop beating for
     the whole kernel and be declared dead by any ``heartbeat_timeout``
-    shorter than one long dispatch."""
+    shorter than one long dispatch.
+
+    ``budget`` is an optional callable returning the call's remaining
+    end-to-end deadline budget in seconds (``Deadline.remaining``).  When
+    installed, the checkpoint tightens its slice as the budget runs down
+    (to ~budget/4, floored at 0.5 ms), so a deadline lands within a small
+    fraction of the remaining budget instead of up to a full default slice
+    late.  Read once per *elapsed* slice, never per checkpoint — calls
+    without a deadline pay nothing."""
     _tls.check = check
     _tls.beat = beat
     _tls.slice_s = slice_s
+    _tls.budget = budget
     _tls.deadline = time.monotonic() + slice_s
 
 
@@ -57,6 +67,7 @@ def clear() -> None:
     """Disarm the checkpoint (call finished; executor thread is reused)."""
     _tls.check = None
     _tls.beat = None
+    _tls.budget = None
 
 
 def checkpoint() -> None:
@@ -69,7 +80,13 @@ def checkpoint() -> None:
         return
     now = time.monotonic()
     if now >= _tls.deadline:
-        _tls.deadline = now + _tls.slice_s
+        slice_s = _tls.slice_s
+        budget = getattr(_tls, "budget", None)
+        if budget is not None:
+            # deadline-aware: approach the expiry in quarter-budget steps
+            # so the cancel fires close to it, not a full slice late
+            slice_s = max(min(slice_s, budget() / 4.0), 0.0005)
+        _tls.deadline = now + slice_s
         beat = getattr(_tls, "beat", None)
         if beat is not None:
             beat()                   # stay alive before maybe raising

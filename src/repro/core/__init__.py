@@ -4,8 +4,8 @@ from repro.core.faaslet import (CONTAINER_OVERHEAD_BYTES,
                                 FaasletMemoryFault, ResourceLimitExceeded)
 from repro.core.host_interface import CallCancelled, FaasmAPI, StateKeyError
 from repro.core.proto import ExecutableCache, ProtoFaaslet
-from repro.core.runtime import (Call, CompletionLatch, FaasmRuntime,
-                                FunctionDef, Host)
+from repro.core.runtime import (BatchTimeout, Call, CompletionLatch,
+                                FaasmRuntime, FunctionDef, Host)
 from repro.core.scheduler import LocalScheduler
 from repro.core.chain import await_all, chain, outputs
 from repro.core.vfs import VirtualFS
@@ -14,7 +14,7 @@ __all__ = [
     "ArenaBase", "Faaslet", "FaasletMemoryFault", "ResourceLimitExceeded",
     "FaasmAPI", "CallCancelled",
     "StateKeyError", "ExecutableCache", "ProtoFaaslet", "Call",
-    "CompletionLatch", "FaasmRuntime",
+    "BatchTimeout", "CompletionLatch", "FaasmRuntime",
     "FunctionDef", "Host", "LocalScheduler", "await_all", "chain", "outputs",
     "VirtualFS", "FAASLET_OVERHEAD_BYTES", "CONTAINER_OVERHEAD_BYTES",
 ]

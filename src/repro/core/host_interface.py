@@ -36,6 +36,15 @@ class CallCancelled(RuntimeError):
     discarded computation to completion."""
 
 
+class DeadlineExceeded(CallCancelled):
+    """The call's end-to-end deadline expired mid-execution: same
+    cooperative unwind as a cancel (next host-interface or kernel
+    checkpoint), but the runtime settles the call with
+    ``overload.DEADLINE_RC`` so waiters can tell a deadline from a
+    speculative loss.  The attempt fence keeps any state effects the
+    interrupted attempt already pushed exactly-once."""
+
+
 class FaasmAPI:
     def __init__(self, faaslet: Faaslet, host, runtime, call):
         self.faaslet = faaslet
@@ -80,12 +89,19 @@ class FaasmAPI:
 
     def check_cancelled(self) -> None:
         """Cooperative cancellation point: raise if this call was cancelled
-        (its speculative twin already settled).  Called automatically at
-        chain/await and state pull/push boundaries."""
+        (its speculative twin already settled) or its end-to-end deadline
+        expired.  Called automatically at chain/await and state pull/push
+        boundaries, and from kernel dispatch via ``cancellation.checkpoint``.
+        Deadline-less calls pay one pointer compare for the deadline arm."""
         ev = getattr(self.call, "cancel_event", None)
         if ev is not None and ev.is_set():
             raise CallCancelled(
                 f"call {self.call.id} cancelled (speculative twin settled)")
+        dl = getattr(self.call, "deadline", None)
+        if dl is not None and dl.expired():
+            raise DeadlineExceeded(
+                f"call {self.call.id} exceeded its deadline "
+                f"({dl.budget_s * 1e3:.1f} ms budget)")
 
     def read_call_input(self) -> bytes:
         return self.call.input
@@ -93,23 +109,32 @@ class FaasmAPI:
     def write_call_output(self, out_data: bytes) -> None:
         self.call.output = bytes(out_data)
 
-    def chain_call(self, name: str, args: bytes = b"") -> int:
+    def chain_call(self, name: str, args: bytes = b"",
+                   deadline=None) -> int:
+        """Chain a child call.  ``deadline`` (a float budget in seconds or a
+        ``repro.overload.Deadline``) stamps a tighter expiry; omitted, the
+        child inherits this call's remaining deadline budget."""
         self.check_cancelled()
         self.faaslet.usage.charge_net(n_out=len(args))
-        return self.runtime.invoke(name, bytes(args), parent=self.call)
+        return self.runtime.invoke(name, bytes(args), parent=self.call,
+                                   deadline=deadline)
 
     def chain_call_many(self, name: str, args_list,
-                        state_hint: Optional[List[str]] = None) -> List[int]:
+                        state_hint: Optional[List[str]] = None,
+                        deadline=None) -> List[int]:
         """Batch chain: one submission for the whole fan-out (ordered IDs).
 
         ``state_hint`` names the state keys the batch touches so placement
-        can prefer hosts already holding warm replicas of them."""
+        can prefer hosts already holding warm replicas of them.
+        ``deadline`` is as in :meth:`chain_call`: explicit budget, else the
+        children inherit the parent call's remaining deadline."""
         self.check_cancelled()
         args_list = [bytes(a) for a in args_list]
         for a in args_list:
             self.faaslet.usage.charge_net(n_out=len(a))
         return self.runtime.invoke_many(name, args_list, parent=self.call,
-                                        state_hint=state_hint)
+                                        state_hint=state_hint,
+                                        deadline=deadline)
 
     def await_call(self, call_id: int, timeout: Optional[float] = None) -> int:
         self.check_cancelled()
@@ -264,7 +289,10 @@ class FaasmAPI:
         self.check_cancelled()
         moved = self._local().pull(key, wire=wire)
         if track_delta:
-            self._local().snapshot_base(key)
+            # arm-only: the replica (and its base) is shared with co-located
+            # faaslets — force-stamping here would absorb their pending
+            # HOGWILD writes into the base and lose them (see snapshot_base)
+            self._local().snapshot_base(key, force=False)
         self.faaslet.usage.charge_net(n_in=moved)
 
     def subscribe_state(self, key: str) -> None:

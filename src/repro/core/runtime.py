@@ -32,10 +32,12 @@ from typing import Any, Callable, Dict, List, Optional
 import numpy as np
 
 from repro import cancellation, faults
+from repro import overload as oload
 from repro.analysis.sanitizer import make_mutex
 from repro.core.faaslet import (CONTAINER_OVERHEAD_BYTES,
                                 FAASLET_OVERHEAD_BYTES, Faaslet)
-from repro.core.host_interface import CallCancelled, FaasmAPI
+from repro.core.host_interface import (CallCancelled, DeadlineExceeded,
+                                       FaasmAPI)
 from repro.core.proto import ExecutableCache, ProtoFaaslet
 from repro.core.scheduler import LocalScheduler
 from repro.core.vfs import VirtualFS
@@ -62,6 +64,11 @@ class FunctionDef:
     memory_limit: int = 64 * 65536
     cpu_budget_ns: Optional[int] = None
     net_budget: Optional[int] = None
+    # dequeue shed floor: a deadlined call whose remaining budget is below
+    # this when it reaches the front of a host queue is shed (DEADLINE_RC)
+    # instead of burning an executor slot on work that can't finish in time.
+    # 0.0 defers to OverloadPolicy.deadline_floor_s.
+    deadline_floor_s: float = 0.0
 
 
 @dataclass
@@ -82,6 +89,10 @@ class Call:
     error: str = ""
     twin_id: Optional[int] = None                # speculative re-execution
     primary_id: Optional[int] = None             # set on twins: who to adopt into
+    # end-to-end deadline (repro.overload.Deadline), inherited by chained
+    # children.  None — the overwhelmingly common case — keeps every
+    # deadline hook site at one pointer compare.
+    deadline: Optional[oload.Deadline] = None
     # attempt fencing (exactly-once state effects): every physical execution
     # of this logical call — first dispatch, requeue after host loss, or a
     # speculative twin — carries a distinct epoch drawn from the *primary*
@@ -165,10 +176,16 @@ class Host:
     def __init__(self, host_id: str, runtime: "FaasmRuntime", *,
                  capacity: int = 8, isolation: str = "faaslet",
                  reclaim: str = "auto",
-                 reclaim_rss_bytes: int = 256 << 20):
+                 reclaim_rss_bytes: int = 256 << 20,
+                 max_queue_depth: Optional[int] = None):
         self.id = host_id
         self.runtime = runtime
         self.capacity = capacity
+        # bounded admission: at most capacity + max_queue_depth calls may be
+        # in flight (running + queued); submit() beyond that raises
+        # overload.QueueFull for the dispatcher to spill or shed.  None
+        # keeps the queue unbounded (today's behaviour).
+        self.max_queue_depth = max_queue_depth
         self.isolation = isolation
         # CoW page-reclaim policy for the §5.2 post-call reset: "always"
         # madvises every dirty page back (lowest RSS, next call refaults),
@@ -195,6 +212,7 @@ class Host:
         self.reclaimed_pages = 0         # dirty pages madvise'd back (CoW path)
         self.retained_pages = 0          # dirty pages re-stamped, kept resident
         self.cancelled_execs = 0         # speculative losers stopped early
+        self.rejected_submits = 0        # bounded-queue admission refusals
         self.init_seconds: List[float] = []
         self.billable_byte_seconds = 0.0
         self.calls_done = 0
@@ -204,6 +222,23 @@ class Host:
     def has_capacity(self) -> bool:
         with self._mutex:
             return self.alive and self._inflight < self.capacity
+
+    def has_room(self) -> bool:
+        """Would :meth:`submit` admit a call right now?  Unlike
+        ``has_capacity`` (free executor slot), this is the bounded-queue
+        admission bound: running + queued below capacity + max_queue_depth.
+        Always True for unbounded hosts."""
+        with self._mutex:
+            if not self.alive:
+                return False
+            if self.max_queue_depth is None:
+                return True
+            return self._inflight < self.capacity + self.max_queue_depth
+
+    def queue_depth(self) -> int:
+        """Calls admitted but not yet running (executor backlog)."""
+        with self._mutex:
+            return max(0, self._inflight - self.capacity)
 
     def beat(self):
         self.heartbeat = time.monotonic()
@@ -242,9 +277,20 @@ class Host:
     # -- execution -------------------------------------------------------------
 
     def submit(self, call: Call):
+        # chaos hook: an armed queue-flood rule makes this admission behave
+        # as if the bounded queue were full (outside the mutex — the armed
+        # path may sleep, and lock-blocking forbids that under a lock)
+        flooded = faults.point("queue-flood", call=call.id, host=self.id)
         with self._mutex:
             if not self.alive:
                 raise RuntimeError(f"host {self.id} is down")
+            if flooded or (self.max_queue_depth is not None
+                           and self._inflight >=
+                           self.capacity + self.max_queue_depth):
+                self.rejected_submits += 1
+                raise oload.QueueFull(
+                    f"host {self.id} admission queue full "
+                    f"({self._inflight} in flight)")
             # Claim the call for this host *before* it reaches the pool:
             # if the host dies while the call is still queued (never ran),
             # ``_requeue_lost`` must still find and re-dispatch it.
@@ -303,9 +349,29 @@ class Host:
         self.beat()
         rt = self.runtime
         fdef = rt.functions[call.fn]
+        dl = call.deadline
+        if dl is not None:
+            # dequeue shed: a call that waited out (most of) its budget in
+            # the queue is settled DEADLINE_RC here instead of occupying an
+            # executor slot it can't finish in.  The skew point lets chaos
+            # runs evaporate the budget between queue and check.
+            faults.point("deadline-clock-skew", call=call.id, host=self.id)
+            floor = fdef.deadline_floor_s
+            ovl = rt.overload
+            if floor <= 0.0 and ovl is not None:
+                floor = ovl.deadline_floor_s
+            if dl.remaining() <= floor:
+                rt._count_overload("deadline_total")
+                rt._finish_call(call, rc=oload.DEADLINE_RC, status="deadline",
+                                error="deadline expired before execution")
+                return
         call.host = self.id
         call.status = "running"
         call.t_start = tclock.now()
+        # attempt identity: if the runtime supersedes this epoch mid-flight
+        # (host declared dead, call requeued), this attempt is a zombie and
+        # must not settle the call — see the guard before _finish_call below
+        my_epoch = call.fence_epoch
         tel = _TEL
         if tel is not None:
             # trace context for everything this attempt does on this
@@ -330,7 +396,8 @@ class Host:
         # honour cancel_event within a bounded slice.  The checkpoint also
         # beats the host heartbeat, so a long kernel loop doesn't read as a
         # dead host to a short ``heartbeat_timeout``.
-        cancellation.install(api.check_cancelled, beat=self.beat)
+        cancellation.install(api.check_cancelled, beat=self.beat,
+                             budget=dl.remaining if dl is not None else None)
         try:
             ret = fdef.fn(api)
             rc = int(ret) if ret is not None else 0
@@ -341,6 +408,13 @@ class Host:
             # flight — no settling, no cleanup; _run_guarded turns this
             # into a host failure + requeue, like an external fail_host
             raise
+        except DeadlineExceeded as e:
+            # end-to-end deadline hit mid-execution: same cooperative
+            # unwind as a cancel, distinct return code for waiters.  The
+            # cleanup below discards un-pushed deltas; already-pushed ones
+            # stay exactly-once under the attempt fence.
+            rt._count_overload("deadline_total")
+            rc, status, error = oload.DEADLINE_RC, "deadline", repr(e)
         except CallCancelled as e:
             # speculative counterpart already settled: stop quietly and free
             # the executor slot (the result everyone sees was adopted already)
@@ -424,6 +498,19 @@ class Host:
             if self.alive:
                 self._warm[call.fn].append(faaslet)
         self.beat()
+        if my_epoch and (call.fence_epoch != my_epoch
+                         or rt.global_tier.fence_is_dead(call.fence_id,
+                                                         my_epoch)):
+            # Zombie attempt: the runtime gave up on this epoch (heartbeat
+            # false positive / fail_host requeue) while the body was still
+            # running.  Any push made after the supersede was fence-rejected,
+            # so settling ``done`` here would report success for effects that
+            # never landed — the re-dispatched epoch owns the settle.  The
+            # supersede-before-redispatch ordering in _requeue_lost makes
+            # this check sound: a push that was admitted implies the epoch
+            # was live at push time, and an epoch still live *here* (after
+            # the last push) was live for every push.
+            return
         self.runtime._finish_call(call, rc=rc, status=status, error=error,
                                   t_end=t_end)
 
@@ -475,6 +562,23 @@ class CompletionLatch:
         return self._event.wait(timeout)
 
 
+class BatchTimeout(TimeoutError):
+    """A ``wait_all`` deadline passed with part of the batch outstanding.
+
+    Carries the split as structured payload so a partial fan-out timeout is
+    debuggable without tracing: ``pending`` is the ids still in flight (in
+    batch order) and ``done`` maps each completed id to its return code."""
+
+    def __init__(self, pending: List[int], done: Dict[int, int],
+                 timeout: Optional[float]):
+        self.pending = pending
+        self.done = done
+        self.timeout = timeout
+        super().__init__(
+            f"{len(pending)}/{len(pending) + len(done)} calls still "
+            f"outstanding after {timeout}s: {pending}")
+
+
 class FaasmRuntime:
     def __init__(self, n_hosts: int = 2, *, isolation: str = "faaslet",
                  use_proto: bool = True, capacity: int = 8,
@@ -482,7 +586,8 @@ class FaasmRuntime:
                  straggler_timeout: Optional[float] = None,
                  heartbeat_timeout: Optional[float] = None,
                  reclaim: str = "auto",
-                 max_retries: int = 2, backoff: float = 0.005):
+                 max_retries: int = 2, backoff: float = 0.005,
+                 overload: Optional[oload.OverloadPolicy] = None):
         # heartbeat_timeout: when set, the background monitor declares hosts
         # silent for that long (with calls in flight) dead and requeues their
         # work.  Opt-in: a host only beats at call boundaries (and at kernel
@@ -491,6 +596,10 @@ class FaasmRuntime:
         # max_retries: re-execution budget per call beyond the first attempt
         # (host loss or dispatch failure); backoff: base of the exponential
         # re-dispatch delay (attempt n sleeps backoff * 2^(n-1), capped).
+        # overload: arms the overload control plane (bounded host queues,
+        # default deadlines, retry budget, per-host circuit breakers — see
+        # repro.overload.OverloadPolicy).  None, the default, leaves every
+        # overload hook disarmed at one pointer compare.
         assert isolation in ("faaslet", "container")
         assert reclaim in ("auto", "always", "never")
         assert max_retries >= 0 and backoff >= 0.0
@@ -509,12 +618,24 @@ class FaasmRuntime:
         self._active: set = set()                # ids of not-yet-completed calls
         self._rr = itertools.count()
         self._mutex = make_mutex("runtime")
-        self._net: Dict[tuple, queue.Queue] = defaultdict(queue.Queue)
+        # virtual-socket mailboxes: bounded so a flooding sender backpressures
+        # instead of growing an invisible unbounded backlog (bounded-queue
+        # lint rule; depth is the factory default)
+        self._net: Dict[tuple, queue.Queue] = defaultdict(oload.bounded_queue)
         self.straggler_timeout = straggler_timeout
         self.heartbeat_timeout = heartbeat_timeout
         self.max_retries = max_retries
         self.backoff = backoff
         self.max_attempts = max_retries + 1
+        # overload control plane (all None/zero when disarmed)
+        self.overload = overload
+        self._retry_budget = overload.retry_budget if overload else None
+        self._breakers: Optional[Dict[str, oload.CircuitBreaker]] = (
+            {} if overload is not None and overload.breaker is not None
+            else None)
+        self.shed_total = 0              # admission refusals settled SHED_RC
+        self.deadline_total = 0          # calls settled DEADLINE_RC
+        self.spill_total = 0             # admissions spilled to a peer
         # one registry per runtime: hot paths keep their lock-local
         # counters; this collector snapshots them into gauges at scrape
         # time (metrics_text / cold_start_stats / benchmarks all read it)
@@ -534,14 +655,19 @@ class FaasmRuntime:
     # -- cluster elasticity ------------------------------------------------------
 
     def add_host(self, capacity: int = 8) -> str:
+        ovl = self.overload
         with self._mutex:
             hid = f"host{len(self.hosts)}"
             while hid in self.hosts:
                 hid += "x"
             h = Host(hid, self, capacity=capacity, isolation=self.isolation,
-                     reclaim=self.reclaim)
+                     reclaim=self.reclaim,
+                     max_queue_depth=(ovl.max_queue_depth
+                                      if ovl is not None else None))
             self.hosts[hid] = h
             self.schedulers[hid] = LocalScheduler(h, self)
+            if self._breakers is not None:
+                self._breakers[hid] = ovl.breaker()
             return hid
 
     def remove_host(self, host_id: str, drain: bool = True) -> None:
@@ -603,11 +729,30 @@ class FaasmRuntime:
     # -- invocation --------------------------------------------------------------
 
     def invoke(self, fn: str, input_data: bytes = b"",
-               parent: Optional[Call] = None) -> int:
-        return self.invoke_many(fn, [input_data], parent=parent)[0]
+               parent: Optional[Call] = None,
+               deadline: Optional[Any] = None) -> int:
+        return self.invoke_many(fn, [input_data], parent=parent,
+                                deadline=deadline)[0]
+
+    def _resolve_deadline(self, deadline, parent: Optional[Call]):
+        """Deadline for a new batch: explicit (a Deadline, or a float budget
+        in seconds) > inherited from the parent (same absolute expiry, so
+        children get exactly the remaining budget) > the overload policy's
+        default.  None everywhere — the common case — stays None."""
+        if deadline is not None:
+            if isinstance(deadline, oload.Deadline):
+                return deadline
+            return oload.Deadline.after(float(deadline))
+        if parent is not None and parent.deadline is not None:
+            return parent.deadline
+        ovl = self.overload
+        if ovl is not None and ovl.default_deadline_s:
+            return oload.Deadline.after(ovl.default_deadline_s)
+        return None
 
     def invoke_many(self, fn: str, inputs, parent: Optional[Call] = None,
-                    state_hint: Optional[List[str]] = None) -> List[int]:
+                    state_hint: Optional[List[str]] = None,
+                    deadline: Optional[Any] = None) -> List[int]:
         """Submit one call per input in a single batch; returns all call IDs.
 
         The IDs come back in input order — pair with :meth:`wait_all` for
@@ -617,21 +762,83 @@ class FaasmRuntime:
         placement then prefers warm hosts whose local tier already holds
         those keys (Cloudburst-style locality awareness) before
         round-robining, avoiding a redundant global-tier pull per host.
+
+        ``deadline`` stamps an end-to-end expiry on every call in the batch:
+        an :class:`repro.overload.Deadline`, or a float budget in seconds.
+        Omitted, chained children inherit their parent's deadline and
+        top-level calls take the overload policy's default (if armed).
+        Expired work settles with ``overload.DEADLINE_RC`` at admission,
+        dequeue, or the next mid-execution checkpoint.
         """
         if fn not in self.functions:
             raise KeyError(f"function {fn!r} not uploaded")
         pid = parent.id if parent is not None else None
+        dl = self._resolve_deadline(deadline, parent)
         calls = []
         with self._mutex:
             for inp in inputs:
                 call = Call(id=next(_call_ids), fn=fn, input=bytes(inp),
-                            parent=pid, t_submit=tclock.now())
+                            parent=pid, t_submit=tclock.now(), deadline=dl)
                 self._calls[call.id] = call
                 self._active.add(call.id)
                 calls.append(call)
         self._dispatch_batch(calls, state_hint=state_hint)
         self._kick_monitor()
         return [c.id for c in calls]
+
+    # -- overload control plane helpers ---------------------------------------
+
+    def _count_overload(self, counter: str) -> None:
+        with self._mutex:
+            setattr(self, counter, getattr(self, counter) + 1)
+
+    def _breaker_allows(self, host_id: str) -> bool:
+        """Scheduler-side breaker consult.  Disarmed: one pointer compare."""
+        brs = self._breakers
+        if brs is None:
+            return True
+        br = brs.get(host_id)
+        return br is None or br.allow()
+
+    def _admit_expired(self, call: Call) -> bool:
+        """Admission-time deadline gate: settle already-expired work with
+        DEADLINE_RC before it touches a host queue.  True = rejected."""
+        dl = call.deadline
+        if dl is None or not dl.expired():
+            return False
+        self._count_overload("deadline_total")
+        self._finish_call(call, rc=oload.DEADLINE_RC, status="deadline",
+                          error="deadline expired before admission")
+        return True
+
+    def _spill_or_shed(self, call: Call, tried: set) -> None:
+        """A bounded host queue refused ``call``: spill down the rendezvous
+        ranking to the first peer with room (admission policy permitting),
+        else settle fast with SHED_RC.  Shed calls never wait — failing in
+        microseconds is the point."""
+        ovl = self.overload
+        mode = ovl.admission.on_full(call) if ovl is not None else "spill"
+        if mode == "spill":
+            peers = [h for h in self.alive_hosts()
+                     if h.id not in tried and h.has_room()
+                     and self._breaker_allows(h.id)]
+            # rendezvous order (crc32 max wins) keeps the spill target for
+            # a given call stable regardless of which host refused it first
+            peers.sort(key=lambda h: zlib.crc32(f"{call.id}@{h.id}".encode()),
+                       reverse=True)
+            for h in peers:
+                try:
+                    self._assign_epoch(call)
+                    h.submit(call)
+                    self._count_overload("spill_total")
+                    return
+                except oload.QueueFull:
+                    tried.add(h.id)
+                except Exception:
+                    tried.add(h.id)
+        self._count_overload("shed_total")
+        self._finish_call(call, rc=oload.SHED_RC, status="shed",
+                          error="admission queue full, no peer had room")
 
     @staticmethod
     def _rank_holders(state_hint: List[str], holders: List[Host]) -> List[Host]:
@@ -681,13 +888,45 @@ class FaasmRuntime:
             for c in calls:
                 self._finish_call(c, status="failed", error="no alive hosts")
             return
-        entry = alive[next(self._rr) % len(alive)]
+        # breaker-aware entry choice: a cold batch registers its warm set on
+        # the entry host, so picking a tripped host here would park the whole
+        # fan-out behind an open breaker (fail open when every breaker is)
+        candidates = alive
+        if self._breakers is not None:
+            allowed = [h for h in alive if self._breaker_allows(h.id)]
+            if allowed:
+                candidates = allowed
+        entry = candidates[next(self._rr) % len(candidates)]
         sched = self.schedulers[entry.id]
         pool = [self.hosts[h] for h in sched.warm_hosts(fn)
                 if h in self.hosts and self.hosts[h].alive]
         if not pool:
             sched.register_warm(fn)          # batch cold-starts on the entry
             pool = [entry]
+        # batch-aware warm-set growth: a fan-out bigger than the pool's free
+        # executor capacity cold-starts additional alive hosts (registering
+        # them warm) instead of piling the whole batch behind a handful of
+        # busy executors — without this the warm set never grows past the
+        # first entry host and a 6-host cluster serves fan-outs at the
+        # concurrency of one
+        def free_slots():
+            return sum(max(0, h.capacity - h._inflight) for h in pool)
+        if len(calls) > free_slots():
+            in_pool = {h.id for h in pool}
+            for h in candidates:
+                if h.id not in in_pool:
+                    self.schedulers[h.id].register_warm(fn)
+                    pool.append(h)
+                    in_pool.add(h.id)
+                    if len(calls) <= free_slots():
+                        break
+        # circuit breakers: open hosts leave the candidate pool; if every
+        # candidate is open, fail open and keep the pool (refusing all
+        # placement would turn a breaker trip into a total outage)
+        if self._breakers is not None:
+            allowed = [h for h in pool if self._breaker_allows(h.id)]
+            if allowed:
+                pool = allowed
         pinned = None
         if state_hint:
             holders = [h for h in pool
@@ -696,6 +935,8 @@ class FaasmRuntime:
                 pinned = self._rank_holders(list(state_hint), holders)
         n = len(pool)
         for i, c in enumerate(calls):
+            if self._admit_expired(c):
+                continue
             c.attempts += 1
             self._assign_epoch(c)
             if pinned is not None:
@@ -708,6 +949,8 @@ class FaasmRuntime:
                 target = pool[i % n]
             try:
                 target.submit(c)
+            except oload.QueueFull:
+                self._spill_or_shed(c, {target.id})
             except Exception:
                 self._dispatch(c)            # full path: re-place or fail
 
@@ -726,6 +969,8 @@ class FaasmRuntime:
             time.sleep(min(self.backoff * (2 ** (attempts - 1)), 0.25))
 
     def _dispatch(self, call: Call) -> None:
+        if self._admit_expired(call):
+            return
         alive = self.alive_hosts()
         if not alive:
             self._finish_call(call, status="failed", error="no alive hosts")
@@ -735,14 +980,25 @@ class FaasmRuntime:
         target = self.schedulers[entry.id].place(call)
         if not target.alive:
             target = entry
+        if not self._breaker_allows(target.id):
+            # open breaker: reroute to any closed/half-open host; if every
+            # breaker is open, fail open and keep the placement
+            rerouted = next((h for h in alive if h.id != target.id
+                             and self._breaker_allows(h.id)), None)
+            if rerouted is not None:
+                target = rerouted
         call.attempts += 1
         self._assign_epoch(call)
         try:
             target.submit(call)
+        except oload.QueueFull:
+            self._spill_or_shed(call, {target.id})
         except Exception as e:
             # target died between placement and submit: retry elsewhere, and
             # never leave the call pending (a waiter would hang forever)
-            if call.attempts < self.max_attempts:
+            rb = self._retry_budget
+            if call.attempts < self.max_attempts and \
+                    (rb is None or rb.try_spend()):
                 self._retry_backoff(call.attempts)
                 self._dispatch(call)
             else:
@@ -762,7 +1018,9 @@ class FaasmRuntime:
 
         Returns the calls' return codes in the order given; per-call failures
         are isolated (a failed call yields its nonzero code, others still
-        complete)."""
+        complete).  On timeout raises :class:`BatchTimeout`, whose
+        ``pending``/``done`` payload names exactly which calls are still
+        outstanding and what the rest returned."""
         ids = list(call_ids)
         calls = [self._calls[cid] for cid in ids]
         latch = CompletionLatch(len(calls))
@@ -770,7 +1028,10 @@ class FaasmRuntime:
             c.add_done_callback(latch.count_down)
         if not latch.wait(timeout):
             pending = [c.id for c in calls if not c.event.is_set()]
-            raise TimeoutError(f"calls {pending} timed out")
+            if pending:
+                done = {c.id: c.return_code for c in calls
+                        if c.event.is_set()}
+                raise BatchTimeout(pending, done, timeout)
         return [c.return_code for c in calls]
 
     # -- completion (the single exit path for every call) ---------------------
@@ -800,6 +1061,20 @@ class FaasmRuntime:
                         exec_wall=call.exec_wall)
         with self._mutex:
             self._active.discard(call.id)
+        # overload plane feedback (both hooks are one pointer compare when
+        # disarmed): successes refill the retry budget, and every attributable
+        # outcome feeds the executing host's circuit breaker.  Shed/deadline
+        # settles say nothing about host health and are excluded.
+        if first:
+            rb = self._retry_budget
+            if rb is not None and call.status == "done":
+                rb.on_success()
+            brs = self._breakers
+            if brs is not None and call.host is not None \
+                    and call.status in ("done", "failed"):
+                br = brs.get(call.host)
+                if br is not None:
+                    br.record(call.status == "done")
         # exactly-once: the winning settle seals the call's fence, so any
         # still-running attempt (a speculative loser, a zombie on a host
         # declared dead) gets its remaining pushes rejected by the tier
@@ -839,6 +1114,9 @@ class FaasmRuntime:
         """Kill a host; in-flight calls are re-executed elsewhere."""
         h = self.hosts[host_id]
         h.fail()
+        brs = self._breakers
+        if brs is not None and host_id in brs:
+            brs[host_id].trip()          # dead host: breaker opens outright
         self.schedulers[host_id].deregister_warm(host_id)
         self._requeue_lost(host_id)
 
@@ -846,11 +1124,18 @@ class FaasmRuntime:
         with self._mutex:
             lost = [c for c in self._calls.values()
                     if c.host == host_id and not c.event.is_set()]
+        rb = self._retry_budget
         for c in lost:
             if c.attempts >= self.max_attempts:
                 self._finish_call(
                     c, status="failed",
                     error=f"host {host_id} lost, retries exhausted")
+            elif rb is not None and not rb.try_spend():
+                # retry budget dry: a fault storm must not amplify into a
+                # retry storm — settle failed immediately, no backoff loop
+                self._finish_call(
+                    c, status="failed",
+                    error=f"host {host_id} lost, retry budget exhausted")
             else:
                 # fence off the lost attempt BEFORE re-dispatching: any
                 # straggling push from the dead host's epoch (e.g. a frame
@@ -1039,6 +1324,40 @@ class FaasmRuntime:
           "damped WirePolicy wire switches").set(
               sum(t.policy_flips() for t in tiers))
 
+        # overload control plane (docs/observability.md "Overload metrics")
+        with self._mutex:
+            shed, dl_n, spill = (self.shed_total, self.deadline_total,
+                                 self.spill_total)
+        g("faasm_overload_shed_total",
+          "calls refused at admission (SHED_RC)").set(shed)
+        g("faasm_overload_deadline_total",
+          "calls settled DEADLINE_RC (admission/dequeue/mid-exec)").set(dl_n)
+        g("faasm_overload_spill_total",
+          "full-queue admissions spilled to a peer").set(spill)
+        g("faasm_overload_rejected_submits_total",
+          "bounded-queue refusals at Host.submit").set(
+              _sum("rejected_submits"))
+        g("faasm_overload_queue_depth_count",
+          "calls queued beyond running capacity, cluster-wide").set(
+              sum(h.queue_depth() for h in hosts))
+        rb = self._retry_budget
+        if rb is not None:
+            g("faasm_overload_retry_budget_ratio",
+              "retry token bucket fullness").set(rb.fill_ratio())
+            g("faasm_overload_retry_denied_total",
+              "retries refused by the exhausted budget").set(rb.denied_total)
+        brs = self._breakers
+        if brs is not None:
+            g("faasm_overload_breaker_open_total",
+              "circuit-breaker trips across hosts").set(
+                  sum(b.opened_total for b in brs.values()))
+        g("faasm_overload_bcast_coalesced_total",
+          "broadcast frames collapsed to a newer same-key frame").set(
+              gt.bcast_coalesced)
+        g("faasm_overload_bcast_dropped_total",
+          "subscribers dropped to pull-repair by queue overflow").set(
+              gt.bcast_dropped)
+
         plan = faults.active()
         if plan is not None:
             g("faasm_faults_hits_total",
@@ -1084,3 +1403,4 @@ class FaasmRuntime:
         for h in self.hosts.values():
             if h.alive:
                 h.drain()
+        self.global_tier.close()         # stop the broadcast pump threads

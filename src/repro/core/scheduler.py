@@ -99,10 +99,21 @@ class LocalScheduler:
     # -- placement ---------------------------------------------------------------
 
     def place(self, call) -> "Host":
-        """Choose the executing host for ``call`` (may be self)."""
+        """Choose the executing host for ``call`` (may be self).
+
+        Alongside liveness and capacity, placement consults the runtime's
+        per-host circuit breakers (``repro.overload.CircuitBreaker``): a
+        host whose breaker is open left the warm candidate set until a
+        half-open probe readmits it.  Disarmed (no breakers configured) the
+        consult is one pointer compare per candidate.  If *every* warm host
+        is breaker-open the unfiltered set is kept — placement fails open
+        rather than turning breaker trips into a total outage."""
         rt = self.runtime
         warm = [h for h in self.warm_hosts(call.fn)
                 if h in rt.hosts and rt.hosts[h].alive]
+        admitted = [h for h in warm if rt._breaker_allows(h)]
+        if admitted:
+            warm = admitted
         me = self.host
         if me.id in warm and me.has_capacity():
             return me

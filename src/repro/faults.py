@@ -31,6 +31,15 @@ slow-host            delay    ``Host._run`` dispatch and
                               straggles, provoking speculation
 tier-pull-stall      delay    ``LocalTier.pull`` entry — a refresh
                               stalls while pushers race ahead
+queue-flood          drop     ``Host.submit`` — the bounded admission
+                              queue reports full, forcing the overload
+                              spill/shed path (``repro.overload``)
+subscriber-stall     delay    ``LocalTier._deliver`` — the subscriber
+                              stalls applying a broadcast frame; the
+                              pump absorbs it, the pusher must not block
+deadline-clock-skew  delay    ``Host._run`` dequeue deadline check — the
+                              clock reads late, evaporating the call's
+                              remaining budget before the floor check
 ==================== ======== ==========================================
 
 A plan is a seeded schedule: each rule names a point, an Nth-hit trigger,
@@ -57,13 +66,18 @@ FAULT_POINTS = frozenset({
     "codec-error",
     "slow-host",
     "tier-pull-stall",
+    "queue-flood",
+    "subscriber-stall",
+    "deadline-clock-skew",
 })
 
 # Action class per point: raising points throw, delaying points sleep and
 # let the site continue, dropping points return True so the site discards
-# the in-flight artefact.
-_DELAYING = frozenset({"wire-frame-delay", "slow-host", "tier-pull-stall"})
-_DROPPING = frozenset({"wire-frame-drop"})
+# the in-flight artefact (or, for queue-flood, treats the admission queue
+# as full).
+_DELAYING = frozenset({"wire-frame-delay", "slow-host", "tier-pull-stall",
+                       "subscriber-stall", "deadline-clock-skew"})
+_DROPPING = frozenset({"wire-frame-drop", "queue-flood"})
 _CRASHING = frozenset({"host-crash-pre-push", "host-crash-post-push"})
 
 

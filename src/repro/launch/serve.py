@@ -77,7 +77,10 @@ def make_infer_function(model, treedef, host_leaves, prompt_len: int = 16,
     return FunctionDef("infer", infer, init_fn=init)
 
 
-SHED_RC = -2          # return code for requests shed by a degraded cluster
+# canonical overload return codes live with the overload control plane;
+# re-exported here for back-compat (this module defined SHED_RC first)
+from repro.overload import SHED_RC  # noqa: E402
+
 _SHED_CHUNK = 32      # degradation re-check granularity within one wave
 
 
@@ -123,7 +126,9 @@ def submit_degradable(rt, fn: str, payloads, *, min_alive_hosts: int = 1,
 def run_faasm_fanout(model, params, vocab_size: int, n_requests: int,
                      prompt_len: int = 16, n_hosts: int = 1,
                      capacity: int = 8, state_wire: str = None,
-                     min_alive_hosts: int = 1) -> dict:
+                     min_alive_hosts: int = 1,
+                     max_queue_depth: int = None,
+                     default_deadline_ms: float = None) -> dict:
     """Serve ``n_requests`` single-shot requests through the FAASM runtime.
 
     Each request is one Faaslet call running the jitted forward pass; the
@@ -132,13 +137,27 @@ def run_faasm_fanout(model, params, vocab_size: int, n_requests: int,
     turns on the shared serving-stats state (see
     :func:`make_infer_function`) and picks its push wire format; the batch
     then also carries a ``state_hint`` so placement prefers hosts already
-    holding the stats replica."""
+    holding the stats replica.
+
+    ``max_queue_depth`` / ``default_deadline_ms`` arm the overload control
+    plane (``repro.overload``): bounded per-host admission queues with
+    spill-to-peer, and an end-to-end deadline stamped on every request.
+    Requests refused everywhere settle with ``SHED_RC``; requests whose
+    deadline expires settle with ``overload.DEADLINE_RC``.  Both are
+    reported in the returned dict instead of inflating the latency tail."""
+    from repro import overload as oload
     from repro.core import FaasmRuntime
     from repro.state.ddo import VectorAsync
 
     flat, treedef = jax.tree_util.tree_flatten(params)
     host_leaves = [np.asarray(x) for x in flat]
-    rt = FaasmRuntime(n_hosts=n_hosts, capacity=capacity)
+    policy = None
+    if max_queue_depth is not None or default_deadline_ms is not None:
+        policy = oload.OverloadPolicy(
+            max_queue_depth=max_queue_depth,
+            default_deadline_s=(default_deadline_ms / 1e3
+                                if default_deadline_ms else None))
+    rt = FaasmRuntime(n_hosts=n_hosts, capacity=capacity, overload=policy)
     hint = ["serve/stats"] if state_wire is not None else None
     try:
         if state_wire is not None:
@@ -160,8 +179,14 @@ def run_faasm_fanout(model, params, vocab_size: int, n_requests: int,
                                  min_alive_hosts=min_alive_hosts,
                                  state_hint=hint, timeout=600)
         wall = tclock.now() - t0
-        served = [c for c in wave["call_ids"] if c is not None]
-        assert all(r in (0, SHED_RC) for r in wave["codes"]), wave["codes"]
+        from repro.overload import DEADLINE_RC
+        ok_codes = (0, SHED_RC, DEADLINE_RC)
+        assert all(r in ok_codes for r in wave["codes"]), wave["codes"]
+        served = [c for c, r in zip(wave["call_ids"], wave["codes"])
+                  if c is not None and r == 0]
+        n_deadline = sum(1 for r in wave["codes"] if r == DEADLINE_RC)
+        n_shed = (wave["shed"]
+                  + sum(1 for r in wave["codes"] if r == SHED_RC))
         # one source of truth: per-request latency lands in the runtime's
         # registry (mirrored to the process registry for --metrics-port)
         hist = rt.metrics.histogram("faasm_serve_request_ms",
@@ -176,7 +201,8 @@ def run_faasm_fanout(model, params, vocab_size: int, n_requests: int,
                "throughput_rps": len(served) / wall,
                "p50_ms": hist.percentile(0.50) if served else 0.0,
                "p99_ms": hist.percentile(0.99) if served else 0.0,
-               "degraded": wave["degraded"], "shed": wave["shed"]}
+               "degraded": wave["degraded"], "shed": n_shed,
+               "deadline_expired": n_deadline}
         if state_wire is not None:
             out["state_wire"] = state_wire
             out["state_push_mb"] = sum(
@@ -201,6 +227,14 @@ def main():
     ap.add_argument("--min-alive-hosts", type=int, default=1,
                     help="graceful-degradation floor: shed requests (fail "
                          "fast) once fewer hosts than this are alive")
+    ap.add_argument("--max-queue-depth", type=int, default=None,
+                    help="bound each host's admission queue at this many "
+                         "calls beyond its executor capacity; overflow "
+                         "spills to a peer with room or is shed (SHED_RC)")
+    ap.add_argument("--default-deadline-ms", type=float, default=None,
+                    help="stamp this end-to-end deadline (ms) on every "
+                         "request; expired work settles with DEADLINE_RC "
+                         "at admission, dequeue, or the next checkpoint")
     ap.add_argument("--state-wire", choices=("auto", "exact", "int8"),
                     default=None,
                     help="track shared serving stats through the state tier "
@@ -283,13 +317,18 @@ def main():
                              args.faasm_requests, prompt_len=S,
                              n_hosts=args.faasm_hosts,
                              state_wire=args.state_wire,
-                             min_alive_hosts=args.min_alive_hosts)
+                             min_alive_hosts=args.min_alive_hosts,
+                             max_queue_depth=args.max_queue_depth,
+                             default_deadline_ms=args.default_deadline_ms)
         print(f"faasm fan-out: {r['requests']} reqs in {r['wall_s']:.2f}s "
               f"({r['throughput_rps']:.1f} req/s) "
               f"p50={r['p50_ms']:.1f}ms p99={r['p99_ms']:.1f}ms")
         if r.get("degraded"):
             print(f"  DEGRADED: {r['shed']} requests shed (alive hosts "
                   f"below --min-alive-hosts={args.min_alive_hosts})")
+        if r.get("deadline_expired"):
+            print(f"  {r['deadline_expired']} requests expired their "
+                  f"--default-deadline-ms={args.default_deadline_ms} budget")
         if "state_push_mb" in r:
             print(f"  serve/stats pushes ({r['state_wire']} wire): "
                   f"{r['state_push_mb']:.2f}MB to the global tier")

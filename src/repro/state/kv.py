@@ -41,6 +41,7 @@ copy-accounting benchmark reads the former.
 from __future__ import annotations
 
 import threading
+import time
 import zlib
 from collections import defaultdict, deque
 from dataclasses import dataclass, field
@@ -48,6 +49,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import overload as oload
 from repro.analysis.annotations import holds_stripe
 from repro.analysis.sanitizer import make_mutex, wrap_rwlock
 from repro.state.wire import WireFrame, frame_from_quantized, get_codec
@@ -216,6 +218,23 @@ class _Fence:
     hw: Dict[str, int] = field(default_factory=dict)   # key -> applied seq
 
 
+class _BcastChannel:
+    """One subscriber host's broadcast delivery channel: a bounded
+    coalescing frame queue drained by a dedicated pump thread, so a slow or
+    stalled subscriber backpressures onto *its own* channel — never onto
+    the pusher's thread (see ``GlobalTier.broadcast``)."""
+
+    __slots__ = ("host", "q", "cv", "busy", "stop", "thread")
+
+    def __init__(self, host_id: str, depth: int):
+        self.host = host_id
+        self.q = oload.CoalescingQueue(depth=depth)
+        self.cv = threading.Condition()
+        self.busy = False                # a drain batch is being delivered
+        self.stop = False
+        self.thread: Optional[threading.Thread] = None
+
+
 class GlobalTier:
     """In-memory stand-in for the distributed KVS backing the global tier.
 
@@ -240,6 +259,15 @@ class GlobalTier:
         self._fences: Dict[str, _Fence] = {}
         self._fence_sealed: deque = deque()    # FIFO of sealed ids to prune
         self.fence_rejections = 0              # pushes refused by the fence
+        # backpressured broadcast plane: one bounded channel + pump thread
+        # per subscriber host, created lazily on first fan-out.  Guarded by
+        # its own mutex (never nested inside a stripe lock).
+        self._bcast_mu = make_mutex("bcast")
+        self._bcast_channels: Dict[str, _BcastChannel] = {}
+        self._bcast_closed = False
+        self.bcast_depth = oload.DEFAULT_BCAST_DEPTH
+        self.bcast_coalesced = 0               # frames collapsed to a newer one
+        self.bcast_dropped = 0                 # subscribers dropped on overflow
 
     def _stripe(self, key: str) -> _Stripe:
         return self._stripes[zlib.crc32(key.encode()) % self.n_stripes]
@@ -285,6 +313,16 @@ class GlobalTier:
             f.dead_epoch = max(f.dead_epoch, epoch)
         if _SAN is not None:
             _SAN.fence_superseded(call_id, epoch)
+
+    def fence_is_dead(self, call_id: str, epoch: int) -> bool:
+        """True when ``epoch`` of ``call_id`` has been superseded: the
+        runtime requeued the call past it, so any push this attempt made
+        after the supersede was rejected.  An attempt that finds its epoch
+        dead must not settle the call — its \"success\" may name state
+        effects that never landed."""
+        with self._fence_mu:
+            f = self._fences.get(call_id)
+            return f is not None and epoch <= f.dead_epoch
 
     def fence_seal(self, call_id: str, epoch: int) -> None:
         """The call settled with ``epoch``'s result: no other attempt may
@@ -510,6 +548,7 @@ class GlobalTier:
     def add_inplace(self, key: str, local: np.ndarray,
                     base: Optional[np.ndarray] = None, *,
                     host: str = "?", return_version: bool = False,
+                    rebase: bool = False,
                     fence: Optional[Tuple[str, int, int]] = None):
         """HOGWILD delta push computed in place in the global buffer:
         ``global += local`` then ``global -= base`` — no value-sized copy at
@@ -534,9 +573,19 @@ class GlobalTier:
             g = v.buf[:v.length - v.length % itemsize].view(dtype)
             n = min(g.size, local.size)
             if n:
-                g[:n] += local[:n]
-                if base is not None:
-                    g[:n] -= base[:n]
+                if rebase and base is not None:
+                    # one coherent read of the live replica: the same delta
+                    # lands in the global buffer AND in the pusher's base, so
+                    # a concurrent HOGWILD add after the read stays pending
+                    # for the next push instead of being silently absorbed
+                    # into a re-read base (lost update)
+                    delta = local[:n] - base[:n]
+                    g[:n] += delta
+                    base[:n] += delta
+                else:
+                    g[:n] += local[:n]
+                    if base is not None:
+                        g[:n] -= base[:n]
             m = s.meta.get(key)
             prev = m.version if m is not None else 0
             s.bump(key)
@@ -759,31 +808,124 @@ class GlobalTier:
                   exclude: Optional[str] = None) -> int:
         """Fan an applied (version-stamped) wire frame out to every
         subscriber of ``key`` except ``exclude`` (the pusher, whose replica
-        already contains the delta).  Returns subscribers reached.
+        already contains the delta).  Returns subscribers enqueued to.
 
-        Must be called with **no tier locks held**: callbacks take replica
-        locks on the receiving side.  A callback that raises (subscriber
-        churn — e.g. its host died mid-broadcast) is dropped from the list;
-        the remaining subscribers still receive the frame, and a returning
-        host repairs itself through the delta-pull path."""
+        Delivery is **asynchronous and backpressured**: the pusher only
+        enqueues onto each subscriber's bounded coalescing channel and
+        returns — a stalled subscriber can never stall the pusher.  When a
+        channel already holds a frame for this key it is collapsed to the
+        newest (the skipped predecessor is a version gap the subscriber's
+        ``prev_version`` check tolerates; the next delta pull repairs it).
+        When the channel is full of *distinct* keys, the subscriber is
+        dropped back to pull-repair entirely.  A callback that raises on
+        the pump thread (subscriber churn — e.g. its host died) is culled
+        the same way the old synchronous fan-out culled it.
+
+        Must be called with **no tier locks held** (the enqueue takes the
+        stripe lock and the channel lock in sequence, never nested under a
+        caller's lock).  Use :meth:`flush_broadcasts` where a test or
+        benchmark needs delivery to have happened."""
         s = self._stripe(key)
         with s.lock:
             targets = [(h, cb) for h, cb in s.subs.get(key, {}).items()
                        if h != exclude]
-        delivered = 0
+        enqueued = 0
         for h, cb in targets:
-            try:
-                cb(key, frame)
-                delivered += 1
-            except Exception:
+            ch = self._bcast_channel(h)
+            if ch is None:                       # tier closed: drop quietly
+                break
+            outcome = ch.q.put(key, (frame, cb))
+            if outcome == "overflow":
+                # bounded backlog exceeded: this subscriber is too far
+                # behind to follow the fan-out — drop it to pull-repair
+                with self._bcast_mu:
+                    self.bcast_dropped += 1
                 with s.lock:
                     d = s.subs.get(key)
                     if d is not None and d.get(h) is cb:
                         d.pop(h, None)
-        if delivered:
-            with s.lock:
-                s.bcast += delivered * frame.nbytes
-        return delivered
+                continue
+            if outcome == "coalesced":
+                with self._bcast_mu:
+                    self.bcast_coalesced += 1
+            enqueued += 1
+            with ch.cv:
+                ch.cv.notify()
+        return enqueued
+
+    def _bcast_channel(self, host_id: str) -> Optional[_BcastChannel]:
+        with self._bcast_mu:
+            if self._bcast_closed:
+                return None
+            ch = self._bcast_channels.get(host_id)
+            if ch is None:
+                ch = _BcastChannel(host_id, self.bcast_depth)
+                ch.thread = threading.Thread(
+                    target=self._bcast_pump, args=(ch,),
+                    name=f"bcast-pump-{host_id}", daemon=True)
+                self._bcast_channels[host_id] = ch
+                ch.thread.start()
+            return ch
+
+    def _bcast_pump(self, ch: _BcastChannel) -> None:
+        """Drain loop for one subscriber channel (its own daemon thread).
+        Delivers outside all tier locks; accounts ``s.bcast`` under the
+        stripe lock after each successful delivery."""
+        while True:
+            with ch.cv:
+                while not ch.stop and len(ch.q) == 0:
+                    ch.cv.wait()
+                if ch.stop:
+                    return
+                ch.busy = True
+            for key, (frame, cb) in ch.q.drain():
+                try:
+                    cb(key, frame)
+                except Exception:
+                    s = self._stripe(key)
+                    with s.lock:
+                        d = s.subs.get(key)
+                        if d is not None and d.get(ch.host) is cb:
+                            d.pop(ch.host, None)
+                else:
+                    s = self._stripe(key)
+                    with s.lock:
+                        s.bcast += frame.nbytes
+            with ch.cv:
+                ch.busy = False
+                ch.cv.notify_all()               # wake flush waiters
+
+    def flush_broadcasts(self, timeout: float = 5.0) -> bool:
+        """Block until every enqueued broadcast frame has been delivered
+        (or culled), or ``timeout`` elapses.  Returns True on quiescence.
+        Delivery is asynchronous; call this wherever a test or benchmark
+        asserts on subscriber state right after a push."""
+        end = time.monotonic() + timeout
+        with self._bcast_mu:
+            channels = list(self._bcast_channels.values())
+        for ch in channels:
+            with ch.cv:
+                while (len(ch.q) or ch.busy) and not ch.stop:
+                    left = end - time.monotonic()
+                    if left <= 0.0:
+                        return False
+                    ch.cv.wait(min(left, 0.05))
+        return True
+
+    def close(self) -> None:
+        """Stop the broadcast pump threads (idempotent).  Frames still
+        queued are dropped — subscribers repair through delta pulls."""
+        with self._bcast_mu:
+            self._bcast_closed = True
+            channels = list(self._bcast_channels.values())
+            self._bcast_channels.clear()
+        for ch in channels:
+            with ch.cv:
+                ch.stop = True
+                ch.cv.notify_all()
+        for ch in channels:
+            if ch.thread is not None:
+                ch.thread.join(timeout=1.0)
 
     def n_chunks(self, key: str) -> int:
         sz = self.size(key)

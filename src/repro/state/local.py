@@ -360,6 +360,10 @@ class LocalTier:
             return                       # frame lost on the wire to this peer
         faults.point("wire-frame-delay", key=key, host=self.host_id)
         faults.point("subscriber-raise", key=key, host=self.host_id)
+        # a stalled subscriber: runs on the broadcast pump thread, so the
+        # stall backpressures this host's bounded channel (coalescing, then
+        # drop-to-pull-repair) — never the pusher (asserted in test_chaos)
+        faults.point("subscriber-stall", key=key, host=self.host_id)
         with self._mutex:
             r = self._replicas.get(key)
         if r is None:
@@ -651,6 +655,22 @@ class LocalTier:
             r.base[:] = r.buf                # reuse the allocation
 
     @staticmethod
+    def _rebase_pushed(r: Replica, pushed: np.ndarray) -> None:
+        """Re-stamp the delta base from the f32 content a push actually read
+        (replica write lock held).  Unlike :meth:`_refresh_base` this never
+        re-reads the live buffer: co-located faaslets write it HOGWILD with
+        no lock, so a base taken from a second read silently absorbs any add
+        that landed between the push's read and the refresh — a lost update
+        the delta stream can never repair.  Rebasing from the pushed
+        snapshot keeps such an add pending for the next delta instead."""
+        if r.base is None or r.base.size != r.buf.size:
+            # faasmlint: disable=tier-copy -- replica-internal base snapshot
+            r.base = r.buf.copy()
+        bv = r.base.view(np.float32)
+        n = min(bv.size, pushed.size)
+        bv[:n] = pushed[:n]
+
+    @staticmethod
     def _base_f32(r: Replica, dt: np.dtype, n: int) -> np.ndarray:
         """The delta base as f32 of exactly ``n`` elements (replica lock
         held).  A base snapshotted before the buffer grew is zero-extended —
@@ -669,16 +689,25 @@ class LocalTier:
             out[:bv.size] = bv.astype(np.float32, copy=False)
         return out
 
-    def snapshot_base(self, key: str) -> None:
+    def snapshot_base(self, key: str, *, force: bool = True) -> None:
         """Record the replica contents as the base for a future delta push.
 
         Takes the replica write lock: the base is mutated in place (reusing
         the allocation), and a concurrent ``push_delta`` holds the same lock
-        — exclusion keeps it from observing a torn base."""
+        — exclusion keeps it from observing a torn base.
+
+        ``force=False`` arms tracking only when no current-sized base exists
+        yet.  An existing base is already maintained by every push and pull
+        (rebase-from-pushed-content, frame applies, full-pull re-stamps), so
+        re-stamping it from the live buffer would silently absorb a
+        co-located faaslet's not-yet-pushed HOGWILD writes into the base —
+        a lost update.  ``pull_state(track_delta=True)`` on a warm shared
+        replica uses this arm-only mode."""
         r = self._replicas[key]
         r.lock.acquire_write()
         try:
-            self._refresh_base(r)
+            if force or r.base is None or r.base.size != r.buf.size:
+                self._refresh_base(r)
         finally:
             r.lock.release_write()
 
@@ -768,12 +797,13 @@ class LocalTier:
             local = r.buf.view(dt)
             base = (r.base.view(dt)[:local.size]
                     if r.base is not None else None)
+            rebased = base is not None and base.size == local.size
             lock = gt.lock(key)
             lock.acquire_write()
             try:
                 res = gt.add_inplace(
                     key, local, base, host=self.host_id,
-                    return_version=True, fence=fence)
+                    return_version=True, rebase=rebased, fence=fence)
             finally:
                 lock.release_write()
             if res is None:              # fenced out: superseded/duplicate
@@ -784,7 +814,10 @@ class LocalTier:
                                origin=self.origin_id)
                 return 0
             moved, prev, new = res
-            self._refresh_base(r)
+            if not rebased:
+                # first tracked push (no base yet): snapshot one.  Later
+                # pushes rebase inside add_inplace from the read itself.
+                self._refresh_base(r)
             r.dirty_chunks.clear()
             # the pusher's buffer is the post-push content: keep its base
             # version current (same rule as _after_push) so its own warm
@@ -822,6 +855,7 @@ class LocalTier:
         enc0 = tel.now_ns() if tel is not None else 0
         r.lock.acquire_write()
         try:
+            snap = None
             d = r.device
             if d is not None and d.fresh(r):
                 local = np.asarray(d.value, dtype=np.float32).reshape(-1)
@@ -842,13 +876,23 @@ class LocalTier:
                 local = r.buf.view(np.float32)
                 base = self._base_f32(r, np.dtype(np.float32), local.size)
                 eff = local
+                flushed = None
                 if r.residual is not None and r.residual.size == local.size:
+                    flushed = r.residual
                     eff = local + r.residual
                     r.residual = None
                 frame, _ = codec.encode(eff, base, backend=backend)
+                # the buffer content the encode actually read, reconstructed
+                # without a second read: base + payload == eff-as-read
+                snap = base + frame.payload
+                if flushed is not None:
+                    snap -= flushed
                 host_synced = True
             if host_synced:
-                self._refresh_base(r)
+                if snap is not None:
+                    self._rebase_pushed(r, snap)
+                else:
+                    self._refresh_base(r)
                 r.dirty_chunks.clear()
         finally:
             r.lock.release_write()
@@ -905,6 +949,7 @@ class LocalTier:
         enc0 = tel.now_ns() if tel is not None else 0
         r.lock.acquire_write()
         try:
+            snap = None
             d = r.device
             if d is not None and d.fresh(r):
                 import jax.numpy as jnp
@@ -943,7 +988,8 @@ class LocalTier:
                 base = self._base_f32(r, dt, local.size)
                 if r.residual is None or r.residual.size != local.size:
                     r.residual = np.zeros(local.size, np.float32)
-                eff = local.astype(np.float32) + r.residual
+                snap = local.astype(np.float32)  # one coherent buffer read
+                eff = snap + r.residual
                 try:
                     frame, residual = codec.encode(eff, base, backend=backend)
                 except Exception as e:
@@ -954,7 +1000,10 @@ class LocalTier:
                 host_synced = True
             frame.dtype = dt
             if host_synced:
-                self._refresh_base(r)
+                if snap is not None and dt == np.float32:
+                    self._rebase_pushed(r, snap)
+                else:
+                    self._refresh_base(r)
                 r.dirty_chunks.clear()
         finally:
             r.lock.release_write()

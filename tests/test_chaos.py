@@ -20,7 +20,8 @@ import numpy as np
 import pytest
 
 from repro import cancellation, faults
-from repro.core import FaasmRuntime, FunctionDef
+from repro import overload as oload
+from repro.core import BatchTimeout, FaasmRuntime, FunctionDef
 from repro.core.chain import scatter_gather
 from repro.state.ddo import VectorAsync
 from repro.state.kv import GlobalTier
@@ -172,10 +173,12 @@ def test_wire_frame_drop_repaired_by_pull():
             "wire-frame-drop", host="sub")) as plan:
         _view(p)[:] += 1.0
         p.push_delta(KEY, wire="exact")              # frame to sub is lost
+        gt.flush_broadcasts()                        # drain the async fan-out
         assert plan.fired("wire-frame-drop") == 1
         assert _view(sub)[0] == 0.0                  # sub missed it
         _view(p)[:] += 1.0
         p.push_delta(KEY, wire="exact")              # arrives, but out of
+        gt.flush_broadcasts()
         assert _view(sub)[0] == 0.0                  # order: skipped too
     np.testing.assert_array_equal(_global(gt), np.full(64, 2.0, np.float32))
     sub.pull(KEY)                                    # repair via delta window
@@ -190,6 +193,7 @@ def test_wire_frame_delay_converges():
         for _ in range(3):
             _view(p)[0] += 1.0
             p.push_delta(KEY, wire="exact")
+            gt.flush_broadcasts()        # delivery (and its fault) is async
         assert plan.fired("wire-frame-delay") == 3
     assert _global(gt)[0] == 3.0
     sub.pull(KEY)
@@ -204,10 +208,12 @@ def test_subscriber_raise_culled_mid_broadcast():
             "subscriber-raise", host="sub")) as plan:
         _view(p)[:] += 1.0
         p.push_delta(KEY, wire="exact")              # sub raises mid-delivery
+        gt.flush_broadcasts()                        # raise fires on the pump
         assert plan.fired("subscriber-raise") == 1
         assert _global(gt)[0] == 1.0                 # push unaffected
         _view(p)[:] += 1.0
         p.push_delta(KEY, wire="exact")              # sub was culled: no raise
+        gt.flush_broadcasts()
     assert _global(gt)[0] == 2.0
     sub.pull(KEY)                                    # catch-up pull repairs
     assert _view(sub)[0] == 2.0
@@ -507,6 +513,220 @@ def test_scatter_gather_retries_settled_failures():
         rt.shutdown()
 
 
+# -- overload control plane ---------------------------------------------------
+
+def test_overload_chaos_smoke_queue_flood_spills_to_peer():
+    """An armed queue-flood storm on one host makes its bounded admission
+    refuse every submit; the dispatcher spills down the rendezvous ranking
+    to the healthy peer and every call still serves — zero sheds."""
+    rt = FaasmRuntime(n_hosts=2,
+                      overload=oload.OverloadPolicy(max_queue_depth=2))
+    try:
+        rt.upload(FunctionDef("f", lambda api: 0))
+        plan = faults.FaultPlan(seed=3).add("queue-flood", host="host0",
+                                            times=64)
+        with faults.armed(plan):
+            cids = rt.invoke_many("f", [b""] * 6)
+            assert rt.wait_all(cids, timeout=30) == [0] * 6
+        assert plan.fired("queue-flood") >= 1
+        assert rt.spill_total >= 1 and rt.shed_total == 0
+        # nothing admitted on the flooded host: every call ran on the peer
+        assert {rt._calls[c].host for c in cids} == {"host1"}
+    finally:
+        rt.shutdown()
+
+
+def test_queue_flood_everywhere_sheds_fast():
+    """When every host's admission refuses (cluster-wide flood), calls
+    settle SHED_RC in microseconds instead of queueing invisibly."""
+    rt = FaasmRuntime(n_hosts=2,
+                      overload=oload.OverloadPolicy(max_queue_depth=1))
+    try:
+        rt.upload(FunctionDef("f", lambda api: 0))
+        plan = faults.FaultPlan(seed=5).add("queue-flood", times=256)
+        with faults.armed(plan):
+            cids = rt.invoke_many("f", [b""] * 4)
+            codes = rt.wait_all(cids, timeout=30)
+        assert codes == [oload.SHED_RC] * 4
+        assert rt.shed_total == 4
+        assert all(rt._calls[c].status == "shed" for c in cids)
+    finally:
+        rt.shutdown()
+
+
+def test_deadline_clock_skew_sheds_at_dequeue():
+    """A call whose budget evaporates between queue and dequeue (injected
+    clock skew) settles DEADLINE_RC at the dequeue check — the function
+    body never runs, no executor slot is wasted on doomed work."""
+    rt = FaasmRuntime(n_hosts=1,
+                      overload=oload.OverloadPolicy(default_deadline_s=0.05))
+    try:
+        ran = []
+
+        def f(api):
+            ran.append(1)
+            return 0
+
+        rt.upload(FunctionDef("f", f))
+        plan = faults.FaultPlan(seed=7).add("deadline-clock-skew",
+                                            delay_s=0.15)
+        with faults.armed(plan):
+            cid = rt.invoke("f")
+            assert rt.wait(cid, timeout=30) == oload.DEADLINE_RC
+        assert plan.fired("deadline-clock-skew") == 1
+        assert not ran
+        assert rt._calls[cid].status == "deadline"
+        assert rt.deadline_total == 1
+    finally:
+        rt.shutdown()
+
+
+@pytest.mark.sanitize
+def test_deadline_after_partial_push_is_exactly_once():
+    """Deadline × fence: a call that lands one push_delta and then hits its
+    deadline at the next push checkpoint leaves exactly the pushed effect —
+    the un-pushed add is discarded with the failed attempt, nothing is
+    double-applied, and the deadline settle never triggers a retry."""
+    rt = FaasmRuntime(n_hosts=1)
+    try:
+        VectorAsync.create(rt.global_tier, KEY, np.zeros(8, np.float32))
+
+        def fn(api):
+            v = VectorAsync(api, KEY)
+            v.pull(track_delta=True)
+            v.add(0, 1.0)
+            v.push_delta(wire="exact")       # lands before expiry
+            v.add(1, 1.0)                    # never pushed
+            time.sleep(0.2)                  # burn the whole budget
+            v.push_delta(wire="exact")       # checkpoint raises here
+            return 0
+
+        rt.upload(FunctionDef("fn", fn))
+        cid = rt.invoke("fn", deadline=0.08)
+        assert rt.wait(cid, timeout=30) == oload.DEADLINE_RC
+        assert rt._calls[cid].status == "deadline"
+        g = _global(rt.global_tier)
+        assert g[0] == 1.0 and g[1] == 0.0, g[:2]
+    finally:
+        rt.shutdown()
+
+
+def test_subscriber_stall_does_not_block_pusher():
+    """The async-broadcast contract with a timing bound: a subscriber
+    stalled 250 ms delays only its own pump thread — the pusher's
+    push_delta returns in well under 50 ms."""
+    gt, (pusher,), sub = _fabric(subscriber=True)
+    plan = faults.FaultPlan(seed=9).add("subscriber-stall", delay_s=0.25)
+    with faults.armed(plan):
+        _view(pusher)[0] += 1.0
+        t0 = time.perf_counter()
+        pusher.push_delta(KEY, wire="exact")
+        wall = time.perf_counter() - t0
+        gt.flush_broadcasts(timeout=10.0)
+    assert plan.fired("subscriber-stall") == 1
+    assert wall < 0.05, f"pusher blocked {wall * 1e3:.1f} ms by a stalled " \
+                        f"subscriber"
+    want = np.zeros(256, np.float32)
+    want[0] = 1.0
+    np.testing.assert_array_equal(_view(sub), want)
+
+
+def test_bcast_overflow_drops_subscriber_to_pull_repair():
+    """A subscriber whose channel overflows (stalled pump, pushes across
+    more keys than the bounded depth holds) is dropped from the broadcast
+    set instead of backpressuring the fabric — and one delta pull per key
+    repairs it to the exact global state."""
+    gt = GlobalTier()
+    gt.bcast_depth = 1
+    keys = [f"k{i}" for i in range(4)]
+    push, sub = LocalTier("push", gt), LocalTier("sub", gt)
+    for k in keys:
+        gt.set(k, np.zeros(8, np.float32).tobytes(), host="seed")
+        push.pull(k)
+        push.snapshot_base(k)
+        sub.pull(k)
+        sub.subscribe(k)
+    plan = faults.FaultPlan(seed=13).add("subscriber-stall", delay_s=0.3)
+    with faults.armed(plan):
+        for k in keys:
+            push.replica(k).buf.view(np.float32)[0] += 1.0
+            push.push_delta(k, wire="exact")
+        gt.flush_broadcasts(timeout=10.0)
+    assert gt.bcast_dropped >= 1
+    for k in keys:
+        sub.pull(k)
+        assert sub.replica(k).buf.view(np.float32)[0] == 1.0, k
+
+
+def test_wait_all_timeout_names_outstanding_calls():
+    """A partial fan-out timeout is debuggable without tracing: BatchTimeout
+    carries exactly which ids are still in flight and what the rest
+    returned, and the batch stays waitable afterwards."""
+    rt = FaasmRuntime(n_hosts=2)
+    try:
+        gate = threading.Event()
+        rt.upload(FunctionDef("fast", lambda api: 0))
+        rt.upload(FunctionDef("slow", lambda api: 0 if gate.wait(10) else 1))
+        cid_f = rt.invoke("fast")
+        assert rt.wait(cid_f, timeout=10) == 0       # settled before the batch
+        cid_s = rt.invoke("slow")
+        with pytest.raises(BatchTimeout) as ei:
+            rt.wait_all([cid_f, cid_s], timeout=0.2)
+        bt = ei.value
+        assert bt.pending == [cid_s]
+        assert bt.done == {cid_f: 0}
+        assert bt.timeout == 0.2
+        assert str(cid_s) in str(bt)
+        gate.set()
+        assert rt.wait_all([cid_f, cid_s], timeout=30) == [0, 0]
+    finally:
+        rt.shutdown()
+
+
+def test_open_breaker_steers_placement_and_fails_open():
+    """An open per-host breaker removes the host from the candidate pool;
+    when every breaker is open the scheduler fails open (placement beats a
+    self-inflicted total outage)."""
+    rt = FaasmRuntime(n_hosts=2, overload=oload.OverloadPolicy(
+        breaker=lambda: oload.CircuitBreaker(reset_timeout_s=60.0)))
+    try:
+        rt.upload(FunctionDef("f", lambda api: 0))
+        rt._breakers["host0"].trip()
+        cids = rt.invoke_many("f", [b""] * 4)
+        assert rt.wait_all(cids, timeout=30) == [0] * 4
+        assert {rt._calls[c].host for c in cids} == {"host1"}
+        # all breakers open: fail open rather than refuse all placement
+        rt._breakers["host1"].trip()
+        cid = rt.invoke("f")
+        assert rt.wait(cid, timeout=30) == 0
+    finally:
+        rt.shutdown()
+
+
+def test_retry_budget_dry_settles_lost_calls_failed():
+    """With the retry budget exhausted, a call lost to host failure settles
+    failed immediately instead of amplifying the fault into a retry storm."""
+    rt = FaasmRuntime(n_hosts=2, capacity=1, overload=oload.OverloadPolicy(
+        retry_budget=oload.RetryBudget(initial=0.0)))
+    try:
+        block = threading.Event()
+        rt.upload(FunctionDef("f", lambda api: 0 if block.wait(10) else 1))
+        cid = rt.invoke("f")
+        deadline = time.monotonic() + 5.0
+        while rt._calls[cid].status != "running" and \
+                time.monotonic() < deadline:
+            time.sleep(0.001)
+        assert rt._calls[cid].status == "running"
+        rt.fail_host(rt._calls[cid].host)
+        rc = rt.wait(cid, timeout=30)
+        block.set()
+        assert rc != 0
+        assert "retry budget exhausted" in rt._calls[cid].error
+        assert rt.overload.retry_budget.denied_total == 1
+    finally:
+        rt.shutdown()
+
+
 # -- the seeded chaos matrix --------------------------------------------------
 
 def _storm(seed, n_iters=6):
@@ -559,6 +779,7 @@ def _storm(seed, n_iters=6):
             th.join(timeout=30)
         stop.set()
         pt.join(timeout=30)
+        gt.flush_broadcasts()            # drain pumps while still armed
     assert not errors, errors
 
     want = np.zeros(n, np.float32)

@@ -239,6 +239,49 @@ def test_metric_naming_suppressable():
     assert lint_source(code, "state/kv.py") == []
 
 
+# -- bounded-queue ----------------------------------------------------------
+
+def test_bounded_queue_seeded():
+    code = (
+        "import queue\n"
+        "class Host:\n"
+        "    def __init__(self):\n"
+        "        self.inbox = queue.Queue()\n"
+    )
+    vs = lint_source(code, "core/runtime.py")
+    assert rules_of(vs) == {"bounded-queue"}
+    assert vs[0].line == 4
+    # bare-name constructions and the other stdlib queue flavours too
+    bare = ("from queue import SimpleQueue, LifoQueue\n"
+            "a = SimpleQueue()\n"
+            "b = LifoQueue()\n")
+    vs = lint_source(bare, "state/kv.py")
+    assert rules_of(vs) == {"bounded-queue"}
+    assert [v.line for v in vs] == [2, 3]
+
+
+def test_bounded_queue_clean_idiom_and_out_of_scope():
+    # the sanctioned constructors don't trip the rule
+    clean = (
+        "from repro.overload import bounded_queue, CoalescingQueue\n"
+        "q = bounded_queue(64)\n"
+        "c = CoalescingQueue(depth=8)\n"
+    )
+    assert lint_source(clean, "core/runtime.py") == []
+    # raw queues outside the data plane (bench, launch, overload's own
+    # implementation) are out of scope
+    raw = "import queue\nq = queue.Queue()\n"
+    assert lint_source(raw, "overload.py") == []
+    assert lint_source(raw, "launch/serve.py") == []
+
+
+def test_bounded_queue_suppressable():
+    code = ("import queue\n"
+            "q = queue.Queue()"
+            "  # faasmlint: disable=bounded-queue -- drained synchronously\n")
+    assert lint_source(code, "core/runtime.py") == []
+
+
 # -- suppressions -----------------------------------------------------------
 
 def test_suppression_without_justification_is_a_violation():
@@ -290,5 +333,5 @@ def test_cli_exits_zero_on_src():
 def test_every_rule_is_documented():
     assert set(RULES) == {"stripe-access", "lock-blocking", "wire-construct",
                           "tier-copy", "fault-point", "metric-naming",
-                          "suppress-justify"}
+                          "bounded-queue", "suppress-justify"}
     assert all(RULES.values())

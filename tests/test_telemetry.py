@@ -228,6 +228,7 @@ def test_fault_hits_become_instant_spans():
     with faults.armed(plan):
         tier.replica(KEY).buf.view(np.float32)[0] += 1.0
         tier.push_delta(KEY, wire="exact")
+        gt.flush_broadcasts()            # the drop fires on the pump thread
     assert plan.fired("wire-frame-drop") == 1
     hits = _spans_named(t.spans(), "fault.wire-frame-drop")
     assert hits and hits[0].tags["action"] == "drop"
@@ -246,6 +247,7 @@ def test_wire_span_tags():
     sub.subscribe(KEY)
     tier.replica(KEY).buf.view(np.float32)[:] += 1.0
     tier.push_delta(KEY, wire="int8")
+    gt.flush_broadcasts()                # bcast spans record on the pump
     puller = LocalTier("puller", gt)
     puller.pull(KEY)
     got = t.spans()
@@ -386,6 +388,7 @@ def test_chrome_export_schema(tmp_path):
     sub.subscribe(KEY)
     tier.replica(KEY).buf.view(np.float32)[:] += 1.0
     tier.push_delta(KEY, wire="int8")
+    gt.flush_broadcasts()                # bcast flow-finish records on the pump
 
     path = tmp_path / "trace.json"
     n_events = trace.export_chrome(str(path))

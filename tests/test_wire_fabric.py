@@ -159,6 +159,7 @@ def test_subscribed_peer_converges_with_zero_pull_bytes():
     view = pusher.replica("w").buf.view(np.float32)
     view[:] += (_rng(5).normal(size=n) * 0.01).astype(np.float32)
     pusher.push_delta("w", wire="int8")
+    gt.flush_broadcasts()                       # fan-out is async: drain it
     # the peer replica converged through the broadcast alone
     np.testing.assert_array_equal(peer.replica("w").buf.view(np.float32),
                                   _global(gt))
@@ -178,6 +179,7 @@ def test_broadcast_updates_base_no_repush():
     pview = pusher.replica("w").buf.view(np.float32)
     pview[:] += 2.0
     pusher.push_delta("w", wire="int8")         # broadcast lands at the peer
+    gt.flush_broadcasts()
     peer.push_delta("w", wire="exact")          # peer pushes nothing new
     np.testing.assert_allclose(_global(gt), 2.0, atol=1e-5)
 
@@ -195,6 +197,7 @@ def test_broadcast_applies_to_fresh_device_replica():
     pview = pusher.replica("w").buf.view(np.float32)
     pview[:] += 2.0
     pusher.push_delta("w", wire="int8")
+    gt.flush_broadcasts()
     assert not peer.device_stale("w")
     np.testing.assert_allclose(np.asarray(peer.device_replica("w").value),
                                _global(gt), atol=1e-6)
@@ -225,11 +228,13 @@ def test_subscriber_churn_host_leaves_mid_broadcast():
     view = pusher.replica("w").buf.view(np.float32)
     view[:] += 1.0
     pusher.push_delta("w", wire="int8")
+    gt.flush_broadcasts()
     np.testing.assert_array_equal(healthy.replica("w").buf.view(np.float32),
                                   _global(gt))
     assert calls["dead"] == 1                   # delivered once, then dropped
     view[:] += 1.0
     pusher.push_delta("w", wire="int8")
+    gt.flush_broadcasts()
     assert calls["dead"] == 1                   # raising subscriber was culled
     np.testing.assert_array_equal(healthy.replica("w").buf.view(np.float32),
                                   _global(gt))
@@ -245,6 +250,7 @@ def test_out_of_order_frame_skipped_then_repaired_by_pull():
     view = pusher.replica("w").buf.view(np.float32)
     view[:] += 1.0
     pusher.push_delta("w", wire="exact")
+    gt.flush_broadcasts()
     # replay the same frame versions: prev no longer matches -> skipped
     stale = WireFrame(wire="exact", numel=n,
                       payload=np.full(n, 100.0, np.float32),
@@ -253,6 +259,7 @@ def test_out_of_order_frame_skipped_then_repaired_by_pull():
     assert float(peer.replica("w").buf.view(np.float32).max()) < 50.0
     view[:] += 1.0
     pusher.push_delta("w", wire="exact")        # peer applies (versions chain)
+    gt.flush_broadcasts()
     assert peer.pull("w") == 0 or True          # and pull reconciles any gap
     np.testing.assert_allclose(peer.replica("w").buf.view(np.float32),
                                _global(gt), atol=1e-5)
@@ -301,6 +308,7 @@ def test_broadcast_applies_f64_frames_with_value_dtype():
     peer.subscribe("w")
     pusher.replica("w").buf.view(np.float64)[:] += 2.0
     pusher.push_delta("w", dtype=np.float64, wire="int8")
+    gt.flush_broadcasts()                       # fan-out is async: drain it
     got = peer.replica("w").buf.view(np.float64)
     want = np.frombuffer(gt.get("w", host="x"), np.float64)
     np.testing.assert_allclose(got, want, atol=1e-4)
@@ -403,6 +411,7 @@ def test_container_sibling_tiers_are_distinct_fabric_parties():
     b.subscribe("w")
     b.replica("w").buf.view(np.float32)[:] += 1.0
     b.push_delta("w", wire="exact")
+    gt.flush_broadcasts()
     np.testing.assert_allclose(a.replica("w").buf.view(np.float32), 4.0,
                                atol=1e-4)
 
