@@ -41,6 +41,7 @@ from repro.core.host_interface import (CallCancelled, DeadlineExceeded,
 from repro.core.proto import ExecutableCache, ProtoFaaslet
 from repro.core.scheduler import LocalScheduler
 from repro.core.vfs import VirtualFS
+from repro.state import wire as _wire_mod
 from repro.state.kv import GlobalTier
 from repro.state.local import LocalTier
 from repro.telemetry import clock as tclock
@@ -52,6 +53,23 @@ _call_ids = itertools.count(1)
 # site below is guarded by one pointer compare — zero ring writes disarmed
 # (asserted by scripts/check_jax_pin.py).
 _TEL = None
+
+try:
+    import resource as _resource
+    _PAGE_SIZE = _resource.getpagesize()
+except ImportError:  # pragma: no cover - CPython always ships resource on linux
+    _PAGE_SIZE = 4096
+
+
+def _proc_rss_bytes() -> Optional[int]:
+    """The process's real resident set size from ``/proc/self/statm``
+    (field 2, in pages), or ``None`` where procfs is unavailable — callers
+    fall back to the tier/Faaslet bookkeeping estimate."""
+    try:
+        with open("/proc/self/statm") as fh:
+            return int(fh.read().split()[1]) * _PAGE_SIZE
+    except (OSError, IndexError, ValueError):
+        return None
 
 
 @dataclass
@@ -191,9 +209,15 @@ class Host:
         # madvises every dirty page back (lowest RSS, next call refaults),
         # "never" re-stamps in place (hot Faaslets stay refault-free), and
         # "auto" reclaims only when host RSS exceeds ``reclaim_rss_bytes``
-        # (the warm pool is LIFO, so the Faaslet being reset is the hot one)
+        # (the warm pool is LIFO, so the Faaslet being reset is the hot one).
+        # "auto" pressure reads the process's real RSS growth since this
+        # host came up (/proc/self/statm), falling back to the tier+Faaslet
+        # bookkeeping estimate where procfs is unavailable — the baseline
+        # delta keeps the interpreter's own footprint (jax alone dwarfs the
+        # default threshold) out of the signal.
         self.reclaim = reclaim
         self.reclaim_rss_bytes = reclaim_rss_bytes
+        self._rss_baseline = _proc_rss_bytes()
         self.local_tier = LocalTier(host_id, runtime.global_tier)
         self._container_tiers: Dict[int, LocalTier] = {}
         self._warm: Dict[str, List[Faaslet]] = defaultdict(list)
@@ -469,13 +493,19 @@ class Host:
                     # the warm pool is LIFO (this Faaslet is appended last
                     # and popped first), so a returning Faaslet is the HOT
                     # one — keep it refault-free unless host RSS actually
-                    # crossed the threshold.  memory_bytes() counts only
-                    # pooled Faaslets; the one being reset is out of the
-                    # pool right now, so add its footprint (its dirty pages
-                    # are exactly what reclaim would return).
-                    pressure = (self.memory_bytes()
-                                + faaslet.memory_bytes()
-                                >= self.reclaim_rss_bytes)
+                    # crossed the threshold.  Real RSS growth since host
+                    # init (procfs) is the ground truth; the bookkeeping
+                    # estimate (memory_bytes() counts only pooled Faaslets,
+                    # so add the one being reset — its dirty pages are
+                    # exactly what reclaim would return) is the fallback.
+                    rss = _proc_rss_bytes()
+                    if rss is not None and self._rss_baseline is not None:
+                        pressure = (rss - self._rss_baseline
+                                    >= self.reclaim_rss_bytes)
+                    else:
+                        pressure = (self.memory_bytes()
+                                    + faaslet.memory_bytes()
+                                    >= self.reclaim_rss_bytes)
                 pages = faaslet.reset_from_base(reclaim=self.reclaim,
                                                 pressure=pressure)
                 reclaimed = faaslet.reclaimed_pages - reclaimed0
@@ -751,7 +781,7 @@ class FaasmRuntime:
         return None
 
     def invoke_many(self, fn: str, inputs, parent: Optional[Call] = None,
-                    state_hint: Optional[List[str]] = None,
+                    state_hint: Optional[List[Any]] = None,
                     deadline: Optional[Any] = None) -> List[int]:
         """Submit one call per input in a single batch; returns all call IDs.
 
@@ -762,6 +792,12 @@ class FaasmRuntime:
         placement then prefers warm hosts whose local tier already holds
         those keys (Cloudburst-style locality awareness) before
         round-robining, avoiding a redundant global-tier pull per host.
+        Two shapes are accepted: a flat list of keys shared by the whole
+        batch (``["k"]``), or one entry *per call* — a key, a list of keys,
+        or ``None`` (``[["a"], ["b"], None, ...]``, same length as
+        ``inputs``).  Per-call hints rendezvous each call to the holder of
+        **its own** key, so a fan-out over disjoint keys shards across the
+        holder set instead of piling onto whichever host won the batch vote.
 
         ``deadline`` stamps an end-to-end expiry on every call in the batch:
         an :class:`repro.overload.Deadline`, or a float budget in seconds.
@@ -862,7 +898,7 @@ class FaasmRuntime:
             reverse=True)
 
     def _dispatch_batch(self, calls: List[Call],
-                        state_hint: Optional[List[str]] = None) -> None:
+                        state_hint: Optional[List[Any]] = None) -> None:
         """Place a homogeneous batch with one warm-set resolution.
 
         Single calls keep the full Omega placement; for a fan-out the warm
@@ -874,7 +910,13 @@ class FaasmRuntime:
         stable across batches, so a key's replica stays hot on one host)
         and each call goes to the first pinned holder with capacity
         (``has_capacity`` is re-read per call, so an over-capacity batch
-        spills down the pinned ranking instead of queueing blindly).  Only
+        spills down the pinned ranking instead of queueing blindly).
+
+        A *per-call* hint (one entry per call — key, key list, or ``None``)
+        pins each call by **its own** keys' rendezvous ranking rather than
+        the batch vote, so fan-outs over disjoint keys shard across the
+        holder set — call i chasing ``"a"`` lands where ``"a"``'s replica
+        is hot even while call j chasing ``"b"`` lands elsewhere.  Only
         when nobody holds anything does the batch fall back to
         round-robining the warm pool."""
         if not calls:
@@ -927,24 +969,53 @@ class FaasmRuntime:
             allowed = [h for h in pool if self._breaker_allows(h.id)]
             if allowed:
                 pool = allowed
-        pinned = None
+        # hint shape: flat list = one key set for the whole batch; any
+        # list/tuple/None entry = per-call hints, one entry per call
+        per_call = None
+        flat_hint: List[str] = []
         if state_hint:
+            if any(isinstance(h, (list, tuple)) or h is None
+                   for h in state_hint):
+                per_call = [([h] if isinstance(h, str) else list(h or []))
+                            for h in state_hint]
+                flat_hint = [k for ks in per_call for k in ks]
+            else:
+                flat_hint = list(state_hint)
+        pinned = None
+        holders: List[Host] = []
+        if flat_hint:
             holders = [h for h in pool
-                       if any(h.local_tier.has(k) for k in state_hint)]
-            if holders:
-                pinned = self._rank_holders(list(state_hint), holders)
+                       if any(h.local_tier.has(k) for k in flat_hint)]
+            if holders and per_call is None:
+                pinned = self._rank_holders(flat_hint, holders)
+        rank_cache: dict = {}
         n = len(pool)
         for i, c in enumerate(calls):
             if self._admit_expired(c):
                 continue
             c.attempts += 1
             self._assign_epoch(c)
-            if pinned is not None:
+            ranked = pinned
+            if per_call is not None and holders:
+                keys = tuple(per_call[i]) if i < len(per_call) else ()
+                if keys:
+                    ranked = rank_cache.get(keys)
+                    if ranked is None:
+                        # prefer hosts already holding *this call's* keys;
+                        # a cold key still rendezvous-pins among the batch
+                        # holders so it warms on one stable host
+                        own = [h for h in holders
+                               if any(h.local_tier.has(k) for k in keys)]
+                        ranked = self._rank_holders(list(keys), own or holders)
+                        rank_cache[keys] = ranked
+                else:
+                    ranked = None
+            if ranked is not None:
                 # first pinned holder with capacity; when every holder is
                 # saturated, round-robin the queueing across the holder set
                 # (locality kept) instead of piling on the top-ranked one
-                target = next((h for h in pinned if h.has_capacity()),
-                              pinned[i % len(pinned)])
+                target = next((h for h in ranked if h.has_capacity()),
+                              ranked[i % len(ranked)])
             else:
                 target = pool[i % n]
             try:
@@ -1323,6 +1394,23 @@ class FaasmRuntime:
         g("faasm_wire_policy_flips_total",
           "damped WirePolicy wire switches").set(
               sum(t.policy_flips() for t in tiers))
+
+        # wire cost model (docs/observability.md "Wire cost-model gauges"):
+        # disarmed (the default) publishes nothing — one None check
+        cost = _wire_mod._COST
+        if cost is not None:
+            snap = cost.snapshot()
+            g("faasm_wire_cost_samples_total",
+              "encode/transfer observations folded into the model").set(
+                  cost.samples)
+            for wire_name, buckets in snap.items():
+                for bucket, (enc_ns, rest_ns) in buckets.items():
+                    g(f"faasm_wire_cost_{wire_name}_b{bucket}_encode_us",
+                      "EWMA encode cost at 2^b value bytes").set(
+                          enc_ns / 1e3)
+                    g(f"faasm_wire_cost_{wire_name}_b{bucket}_rest_us",
+                      "EWMA non-encode push cost at 2^b value bytes").set(
+                          rest_ns / 1e3)
 
         # overload control plane (docs/observability.md "Overload metrics")
         with self._mutex:

@@ -3,7 +3,18 @@
 Each kernel package ships: ``kernel.py`` (pl.pallas_call + BlockSpec VMEM
 tiling), ``ops.py`` (jitted wrapper with xla / pallas / pallas_interpret
 dispatch) and ``ref.py`` (pure-jnp oracle used by the allclose test sweeps).
+
+Re-exports are lazy (PEP 562): importing this package must not import jax,
+so the jax-free host wire codec (``state_push.hostcodec``) stays importable
+before any device runtime initialisation (``scripts/check_jax_pin.py``
+relies on this ordering).
 """
-from repro.kernels.common import BACKENDS, default_backend, resolve_backend
 
 __all__ = ["BACKENDS", "default_backend", "resolve_backend"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        from repro.kernels import common
+        return getattr(common, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

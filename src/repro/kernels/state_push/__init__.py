@@ -1,9 +1,25 @@
-from repro.kernels.state_push.ops import (apply_delta, apply_pull, dequantize,
-                                          encode_pull, push, quantize_delta,
-                                          wire_nbytes)
-from repro.kernels.state_push.ref import (apply_delta_ref, push_ref,
-                                          quantize_delta_ref)
+"""Fused two-tier state push kernels.
 
-__all__ = ["apply_delta", "apply_pull", "dequantize", "encode_pull", "push",
-           "quantize_delta", "wire_nbytes", "apply_delta_ref", "push_ref",
-           "quantize_delta_ref"]
+Re-exports are lazy (PEP 562): ``ops``/``ref`` import jax at module scope,
+but ``hostcodec`` — the numpy-only host wire codec — must stay importable
+without jax (``state/wire.py`` imports it at module scope and
+``scripts/check_jax_pin.py`` exercises it before touching jax).
+"""
+
+_OPS = ("apply_delta", "apply_pull", "dequantize", "encode_fp8",
+        "encode_pull", "encode_quant", "push", "quantize_delta",
+        "wire_nbytes")
+_REF = ("apply_delta_ref", "push_ref", "quantize_delta_ref",
+        "quantize_fp8_ref")
+
+__all__ = list(_OPS) + list(_REF)
+
+
+def __getattr__(name):
+    if name in _OPS:
+        from repro.kernels.state_push import ops
+        return getattr(ops, name)
+    if name in _REF:
+        from repro.kernels.state_push import ref
+        return getattr(ref, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

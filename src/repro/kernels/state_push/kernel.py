@@ -25,11 +25,23 @@ from jax.experimental.pallas import tpu as pltpu
 LANES = 128
 
 
-def _quantize_kernel(local_ref, base_ref, q_ref, scale_ref):
+def _quantize_kernel(local_ref, base_ref, q_ref, scale_ref, *, qmax: float):
     delta = local_ref[...].astype(jnp.float32) - base_ref[...].astype(jnp.float32)
     absmax = jnp.max(jnp.abs(delta), axis=1, keepdims=True)
-    scale = jnp.maximum(absmax / 127.0, 1e-12)
-    q_ref[...] = jnp.clip(jnp.round(delta / scale), -127, 127).astype(jnp.int8)
+    scale = jnp.maximum(absmax / qmax, 1e-12)
+    q_ref[...] = jnp.clip(jnp.round(delta / scale), -qmax, qmax).astype(jnp.int8)
+    scale_ref[...] = scale
+
+
+FP8_MAX = 448.0  # float8_e4m3fn max finite — clip before cast (no inf in e4m3)
+
+
+def _quantize_fp8_kernel(local_ref, base_ref, q_ref, scale_ref):
+    delta = local_ref[...].astype(jnp.float32) - base_ref[...].astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(delta), axis=1, keepdims=True)
+    scale = jnp.maximum(absmax / FP8_MAX, 1e-12)
+    q_ref[...] = jnp.clip(delta / scale, -FP8_MAX,
+                          FP8_MAX).astype(jnp.float8_e4m3fn)
     scale_ref[...] = scale
 
 
@@ -46,18 +58,36 @@ def _push_kernel(local_ref, base_ref, global_ref, out_ref):
 
 
 def quantize_delta_pallas(local, base, *, block_rows: int = 256,
-                          interpret: bool = False):
+                          interpret: bool = False, qmax: float = 127.0):
     R, L = local.shape
     assert L == LANES and R % block_rows == 0, (local.shape, block_rows)
     grid = (R // block_rows,)
     spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
     sspec = pl.BlockSpec((block_rows, 1), lambda i: (i, 0))
     return pl.pallas_call(
-        _quantize_kernel,
+        functools.partial(_quantize_kernel, qmax=qmax),
         grid=grid,
         in_specs=[spec, spec],
         out_specs=[spec, sspec],
         out_shape=[jax.ShapeDtypeStruct((R, LANES), jnp.int8),
+                   jax.ShapeDtypeStruct((R, 1), jnp.float32)],
+        interpret=interpret,
+    )(local, base)
+
+
+def quantize_fp8_pallas(local, base, *, block_rows: int = 256,
+                        interpret: bool = False):
+    R, L = local.shape
+    assert L == LANES and R % block_rows == 0, (local.shape, block_rows)
+    grid = (R // block_rows,)
+    spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    sspec = pl.BlockSpec((block_rows, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        _quantize_fp8_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec, sspec],
+        out_shape=[jax.ShapeDtypeStruct((R, LANES), jnp.float8_e4m3fn),
                    jax.ShapeDtypeStruct((R, 1), jnp.float32)],
         interpret=interpret,
     )(local, base)

@@ -52,7 +52,9 @@ import numpy as np
 from repro import overload as oload
 from repro.analysis.annotations import holds_stripe
 from repro.analysis.sanitizer import make_mutex, wrap_rwlock
+from repro.state import wire as _wire_mod
 from repro.state.wire import WireFrame, frame_from_quantized, get_codec
+from repro.telemetry import clock as _clock
 
 # repro.analysis.sanitizer installs its hook state here (enable()); None
 # compiles every check in this module down to one pointer compare
@@ -717,7 +719,10 @@ class GlobalTier:
         # int8 re-encode (a fused-kernel dispatch) are full-value work that
         # must not serialise unrelated keys in the stripe behind it
         tel = _TEL
+        cost = _wire_mod._COST
+        timed = tel is not None or cost is not None
         t0 = tel.now() if tel is not None else 0.0
+        w0 = _clock.now_ns() if timed else 0
         numel = max(f.numel for f in served)
         delta = np.zeros(numel, np.float32)
         for f in served:
@@ -725,9 +730,9 @@ class GlobalTier:
             delta[:d.size] += d
         if residual is not None and residual.size == delta.size:
             delta = delta + residual
-        enc0 = tel.now_ns() if tel is not None else 0
+        enc0 = _clock.now_ns() if timed else 0
         frame = get_codec(wire).encode_delta(delta, backend=backend)
-        enc_ns = tel.now_ns() - enc0 if tel is not None else 0
+        enc_ns = _clock.now_ns() - enc0 if timed else 0
         new_residual = None
         if frame.wire != "exact":
             new_residual = delta - frame.decode()
@@ -737,6 +742,11 @@ class GlobalTier:
         with s.lock:
             s.pulled[host] = s.pulled.get(host, 0) + frame.nbytes
             s.copied += frame.nbytes
+        if cost is not None:
+            # pull-direction evidence: the re-encode is the same codec work
+            # a push pays, so it feeds the same per-(wire, size) curve
+            cost.observe(frame.wire, frame.numel * 4, enc_ns,
+                         wall_ns=_clock.now_ns() - w0)
         if tel is not None:
             tel.record("wire.pull", "wire", t0, tel.now(), key=key,
                        wire=frame.wire, nbytes=frame.nbytes,

@@ -40,9 +40,13 @@ boundary is a :class:`~repro.state.wire.WireFrame` encoded by a
     device arrays via ``ops.apply_pull``), converging with zero pull bytes.
 
 ``wire="auto"`` (or ``None``) delegates the choice to the key's
-:class:`~repro.state.wire.WirePolicy` — adaptive int8-vs-exact selection
-from observed delta magnitude/density and residual norm, with flip-flop
-damping; explicit ``wire=`` strings remain as overrides.
+:class:`~repro.state.wire.WirePolicy`: with the
+:class:`~repro.state.wire.WireCostModel` armed it argmins the measured
+per-size end-to-end push cost over ``exact`` and the residual-qualified
+tiers in ``wire_tiers`` (the opt-in menu — ``set_wire_tiers("int8",
+"int4", "fp8")``); disarmed, the historic exact-vs-quantised vote from
+observed delta magnitude/density and residual norm, with flip-flop
+damping.  Explicit ``wire=`` strings remain as overrides.
 """
 from __future__ import annotations
 
@@ -54,16 +58,23 @@ import numpy as np
 
 from repro import faults
 from repro.analysis.sanitizer import make_mutex, wrap_rwlock
+from repro.state import wire as _wire_mod
 from repro.state.kv import GlobalTier, RWLock
-from repro.state.wire import (INT8_WIRE_MIN_BYTES, WireFrame, WirePolicy,
-                              get_codec)
+from repro.state.wire import (INT8_WIRE_MIN_BYTES, WIRES, WireFrame,
+                              WirePolicy, get_codec)
+from repro.telemetry import clock as _clock
 
 __all__ = ["DeviceReplica", "INT8_WIRE_MIN_BYTES", "LocalTier", "Replica"]
 
+# per-wire maximum |code|: absmax ≈ scale·QMAX reconstructs the delta absmax
+# from the wire tuple without a second full-array pass
+_WIRE_QMAX = {"int8": 127.0, "int4": 7.0, "fp8": 448.0}
+
 
 class CodecFallback(Exception):
-    """Internal: the int8 encode failed mid-push; ``push_delta`` retries the
-    same delta (same fence token) on the exact wire so no state is lost."""
+    """Internal: a quantised encode failed mid-push; ``push_delta`` retries
+    the same delta (same fence token) on the exact wire so no state is
+    lost."""
 
 # repro.analysis.sanitizer installs its hook state here (enable()); None
 # compiles every check in this module down to one pointer compare
@@ -145,7 +156,11 @@ class LocalTier:
         self._policies: Dict[str, WirePolicy] = {}
         self._subscribed: Set[str] = set()
         self._mutex = make_mutex("tier", f"tier:{host_id}")
-        self.codec_fallbacks = 0         # int8 encodes rescued by the exact wire
+        self.codec_fallbacks = 0     # quantised encodes rescued by exact wire
+        # quantised tiers the per-key policies may choose from; the narrow
+        # int4/fp8 tiers are opt-in (set_wire_tiers) — their coarser codes
+        # ride the same residual_cap error-feedback discipline
+        self.wire_tiers = ("int8",)
 
     # -- replica lifecycle ------------------------------------------------------
 
@@ -313,8 +328,18 @@ class LocalTier:
         with self._mutex:
             p = self._policies.get(key)
             if p is None:
-                p = self._policies[key] = WirePolicy()
+                p = self._policies[key] = WirePolicy(tiers=self.wire_tiers)
             return p
+
+    def set_wire_tiers(self, *tiers: str) -> None:
+        """Opt this tier's keys into a different quantised-tier menu (e.g.
+        ``set_wire_tiers("int8", "int4")``).  Existing per-key policies are
+        rebuilt — learned selection state restarts from the defaults."""
+        for t in tiers:
+            get_codec(t)                 # unknown/unavailable wires fail loud
+        self.wire_tiers = tuple(tiers)
+        with self._mutex:
+            self._policies.clear()
 
     def policy_flips(self) -> int:
         """Total damped wire switches across this tier's per-key policies
@@ -413,10 +438,15 @@ class LocalTier:
             import jax.numpy as jnp
             k = min(int(d.value.size), delta.size)
             if k:
-                if frame.wire == "int8" and int(d.value.size) == frame.numel:
+                codes = (frame.codes()
+                         if int(d.value.size) == frame.numel else None)
+                if codes is not None:
+                    # quantised frame onto a device value: the fused kernel
+                    # applies q·scale on device — no host round-trip (int4
+                    # arrives nibble-unpacked, fp8 casts in-kernel)
                     from repro.kernels.state_push import ops
-                    d.value = ops.apply_pull(d.value, frame.payload,
-                                             frame.scales, backend=backend)
+                    d.value = ops.apply_pull(d.value, codes[0], codes[1],
+                                             backend=backend)
                 else:
                     upd = jnp.asarray(delta[:k]).astype(d.value.dtype)
                     d.value = d.value.at[:k].add(upd)
@@ -754,15 +784,15 @@ class LocalTier:
         auto = wire in (None, "auto")
         if auto:
             wire = self.wire_policy(key).select(r.buf.size, dt)
-        if wire not in ("exact", "int8"):
-            raise ValueError(f"wire {wire!r} not in ('exact', 'int8', 'auto')")
+        if wire not in WIRES:
+            raise ValueError(f"wire {wire!r} not in {WIRES + ('auto',)}")
         exact_framed = (dt == np.float32 and gt.delta_window > 0
                         and gt.wire_interest(key, exclude=self.origin_id))
-        if (wire == "int8" and dt.kind == "f"
+        if (wire != "exact" and dt.kind == "f"
                 and r.buf.size >= INT8_WIRE_MIN_BYTES):
             try:
-                moved = self._push_delta_int8(key, r, dt, backend, auto=auto,
-                                              fence=fence)
+                moved = self._push_delta_quant(key, r, dt, backend, wire=wire,
+                                               auto=auto, fence=fence)
             except CodecFallback:
                 # the quantised encode failed before any tier effect: the
                 # delta must not be lost — re-push it on the exact wire with
@@ -851,8 +881,10 @@ class LocalTier:
         gt = self.global_tier
         codec = get_codec("exact")
         tel = _TEL
+        cost = _wire_mod._COST
+        timed = tel is not None or cost is not None
         t0 = tel.now() if tel is not None else 0.0
-        enc0 = tel.now_ns() if tel is not None else 0
+        enc0 = _clock.now_ns() if timed else 0
         r.lock.acquire_write()
         try:
             snap = None
@@ -896,7 +928,7 @@ class LocalTier:
                 r.dirty_chunks.clear()
         finally:
             r.lock.release_write()
-        enc_ns = (tel.now_ns() - enc0) if tel is not None else 0
+        enc_ns = (_clock.now_ns() - enc0) if timed else 0
         lock = gt.lock(key)
         lock.acquire_write()
         try:
@@ -916,6 +948,9 @@ class LocalTier:
                            encode_ns=enc_ns, origin=self.origin_id)
             return 0
         self._after_push(key, r, frame)
+        if cost is not None:
+            cost.observe(frame.wire, frame.numel * 4, enc_ns,
+                         wall_ns=_clock.now_ns() - enc0)
         if tel is not None:
             tel.record("wire.push", "wire", t0, tel.now(), key=key,
                        wire=frame.wire, nbytes=frame.nbytes,
@@ -928,25 +963,29 @@ class LocalTier:
             delta = frame.payload
             self.wire_policy(key).observe(
                 delta_absmax=float(np.abs(delta).max()) if delta.size else 0.0,
-                density=float(np.count_nonzero(delta)) / max(delta.size, 1))
+                density=float(np.count_nonzero(delta)) / max(delta.size, 1),
+                wire=frame.wire)
         return moved
 
-    def _push_delta_int8(self, key: str, r: Replica, dt: np.dtype,
-                         backend: Optional[str], *,
-                         auto: bool = False,
-                         fence: Optional[tuple] = None) -> int:
-        """Quantised delta push: encode under the replica write lock, apply
-        under the key's global write lock, broadcast with no locks held.
+    def _push_delta_quant(self, key: str, r: Replica, dt: np.dtype,
+                          backend: Optional[str], *, wire: str = "int8",
+                          auto: bool = False,
+                          fence: Optional[tuple] = None) -> int:
+        """Quantised delta push (int8 / int4 / fp8): encode under the
+        replica write lock, apply under the key's global write lock,
+        broadcast with no locks held.
 
         Device-native when the replica has a fresh device copy: quantise
         runs on ``DeviceReplica.value``/``base`` and only the wire frame
-        comes back to the host.  Otherwise the host replica buffer feeds the
-        kernel directly."""
+        comes back to the host.  Otherwise the host replica buffer feeds
+        the host-native fused codec directly (no JAX dispatch)."""
         gt = self.global_tier
-        codec = get_codec("int8")
+        codec = get_codec(wire)
         tel = _TEL
+        cost = _wire_mod._COST
+        timed = tel is not None or cost is not None
         t0 = tel.now() if tel is not None else 0.0
-        enc0 = tel.now_ns() if tel is not None else 0
+        enc0 = _clock.now_ns() if timed else 0
         r.lock.acquire_write()
         try:
             snap = None
@@ -1007,7 +1046,7 @@ class LocalTier:
                 r.dirty_chunks.clear()
         finally:
             r.lock.release_write()
-        enc_ns = (tel.now_ns() - enc0) if tel is not None else 0
+        enc_ns = (_clock.now_ns() - enc0) if timed else 0
         lock = gt.lock(key)
         lock.acquire_write()
         try:
@@ -1027,6 +1066,9 @@ class LocalTier:
                            encode_ns=enc_ns, origin=self.origin_id)
             return 0
         self._after_push(key, r, frame)
+        if cost is not None:
+            cost.observe(frame.wire, frame.numel * 4, enc_ns,
+                         wall_ns=_clock.now_ns() - enc0)
         if tel is not None:
             tel.record("wire.push", "wire", t0, tel.now(), key=key,
                        wire=frame.wire, nbytes=frame.nbytes,
@@ -1038,14 +1080,16 @@ class LocalTier:
             # quantisation dropped vs what it carried.  Carried mass is
             # derived from the wire tuple itself (per-row mean|q|·scale),
             # not a second full f32 decode of the frame.
-            q, sc = frame.payload, frame.scales
-            carried = float((np.abs(q).mean(axis=1)
-                             * sc[:, 0]).mean()) if q.size else 0.0
+            q, sc = frame.codes()
+            qf = np.abs(q.astype(np.float32))
+            carried = float((qf.mean(axis=1) * sc[:, 0]).mean()) if q.size \
+                else 0.0
             self.wire_policy(key).observe(
-                delta_absmax=(float(sc.max()) * 127.0
+                delta_absmax=(float(sc.max()) * _WIRE_QMAX[frame.wire]
                               if sc is not None and sc.size else 0.0),
-                density=float(np.count_nonzero(q)) / max(q.size, 1),
-                residual_ratio=_mean_abs(residual) / (carried + 1e-12))
+                density=float(np.count_nonzero(qf)) / max(q.size, 1),
+                residual_ratio=_mean_abs(residual) / (carried + 1e-12),
+                wire=frame.wire)
         return moved
 
     def _after_push(self, key: str, r: Replica, frame: WireFrame) -> None:

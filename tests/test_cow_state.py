@@ -356,6 +356,61 @@ def test_reset_reclaim_auto_follows_pressure():
         f.reset_from_base(reclaim="bogus")
 
 
+def test_proc_rss_bytes_reads_real_rss():
+    """/proc/self/statm field 2 × page size — positive and at least as big
+    as the interpreter's floor on any linux box."""
+    from repro.core import runtime as rtmod
+    rss = rtmod._proc_rss_bytes()
+    if rss is None:
+        pytest.skip("procfs unavailable")
+    assert rss > 4 << 20                      # a bare CPython is > 4 MB
+
+
+def test_reclaim_auto_pressure_from_real_rss_with_fallback(monkeypatch):
+    """``reclaim="auto"`` reads real RSS growth since host init; a zero
+    threshold means every reset sees pressure.  When procfs reads fail the
+    bookkeeping estimate takes over — with a huge threshold it reports no
+    pressure and the hot Faaslet is retained."""
+    import mmap as _mmap
+    if not hasattr(_mmap, "MADV_DONTNEED"):
+        pytest.skip("madvise unavailable")
+    from repro.core import runtime as rtmod
+
+    def run(threshold):
+        rt = FaasmRuntime(n_hosts=1, reclaim="auto")
+        try:
+            rt.hosts["host0"].reclaim_rss_bytes = threshold
+
+            def init(api):
+                api.brk(EAGER_COPY_MAX_BYTES + 2 * WASM_PAGE)
+                return None
+
+            def touch_mem(api):
+                api.sbrk(WASM_PAGE)
+                return 0
+
+            rt.upload(FunctionDef("touch_mem", touch_mem, init_fn=init,
+                                  memory_limit=4 * EAGER_COPY_MAX_BYTES))
+            for _ in range(3):
+                assert rt.wait(rt.invoke("touch_mem"), timeout=20) == 0
+            warm = rt.hosts["host0"]._warm["touch_mem"]
+            mmapped = bool(warm) and warm[0]._mm is not None
+            return rt.cold_start_stats(), mmapped
+        finally:
+            rt.shutdown()
+
+    # real-RSS path, threshold 0: any growth (or none) >= 0 is pressure
+    stats, mmapped = run(0)
+    if mmapped:
+        assert stats["reclaimed_pages"] >= 1
+    # procfs gone: the estimate path with the default 256 MB threshold
+    # sees no pressure from a few WASM pages — the Faaslet is retained
+    monkeypatch.setattr(rtmod, "_proc_rss_bytes", lambda: None)
+    stats, _ = run(256 << 20)
+    assert stats["reclaimed_pages"] == 0
+    assert stats["retained_pages"] >= 1
+
+
 def test_runtime_reset_splits_reclaimed_and_retained():
     """End-to-end metric split: an "always" runtime reports reclaimed
     pages, a "never" runtime reports the same work as retained."""

@@ -389,6 +389,41 @@ def test_state_hint_pins_key_to_consistent_holder():
         rt.shutdown()
 
 
+def test_per_call_state_hint_shards_disjoint_keys_across_holders():
+    """One hint entry per call pins each call to the holder of *its own*
+    key — a fan-out over disjoint keys shards across the holder set instead
+    of landing wherever the batch-level vote pointed."""
+    rt = FaasmRuntime(n_hosts=3, capacity=8)
+    try:
+        for k in ("ka", "kb"):
+            rt.global_tier.set(k, bytes(4096), host="up")
+
+        def touch(api):
+            return 0
+
+        rt.upload(FunctionDef("touch", touch))
+        for hid in rt.hosts:
+            rt.schedulers[hid].register_warm("touch")
+        rt.hosts["host0"].local_tier.pull("ka")
+        rt.hosts["host2"].local_tier.pull("kb")
+
+        hints = [["ka"], ["kb"]] * 4
+        cids = rt.invoke_many("touch", [b""] * 8, state_hint=hints)
+        assert rt.wait_all(cids, timeout=30) == [0] * 8
+        placed = [rt.call(c).host for c in cids]
+        assert {placed[i] for i in range(0, 8, 2)} == {"host0"}
+        assert {placed[i] for i in range(1, 8, 2)} == {"host2"}
+
+        # a bare-string entry counts as one key; None falls back to the pool
+        cids = rt.invoke_many("touch", [b""] * 3,
+                              state_hint=["ka", None, ["kb"]])
+        assert rt.wait_all(cids, timeout=30) == [0] * 3
+        assert rt.call(cids[0]).host == "host0"
+        assert rt.call(cids[2]).host == "host2"
+    finally:
+        rt.shutdown()
+
+
 def test_state_hint_spills_to_next_holder_when_saturated():
     """Capacity weighting: a pinned holder without capacity is skipped and
     the batch lands on the next-ranked holder."""
